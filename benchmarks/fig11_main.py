@@ -1,0 +1,57 @@
+"""Fig. 11 — main result: TTFT / TPOT / peak throughput, FASTLIBRA vs
+vLLM vs S-LoRA across scenarios, model sizes and adapter counts.
+
+Methodology follows §6.3: for each (model, #LoRA, system) we sweep sending
+rates from low load up to ~peak and report the average TTFT/TPOT over the
+sweep, plus the 500 ms-SLO peak throughput.
+"""
+
+from .common import CsvOut, QUICK, peak_throughput, run_sweep
+
+SYSTEMS = ("fastlibra", "vllm", "slora")
+
+
+def run(out: CsvOut) -> None:
+    grid = [("llama-7b", n) for n in ((20, 100) if QUICK else (20, 50, 100))]
+    if not QUICK:
+        grid += [("llama-13b", 50), ("llama-34b", 50)]
+    results = {}
+    for scenario in ("chatbot", "translation", "agent"):
+        for model, n_loras in grid:
+            for sysname in SYSTEMS:
+                ttft, tpot, _ = run_sweep(model, scenario, sysname, n_loras)
+                results[(scenario, model, n_loras, sysname)] = (ttft, tpot)
+                out.emit(
+                    f"fig11/{scenario}/{model.split('-')[1]}-{n_loras}/{sysname}/ttft",
+                    ttft * 1e6,
+                    f"tpot_ms={tpot*1e3:.2f}",
+                )
+    # paper headline: average reduction vs each baseline
+    for base in ("vllm", "slora"):
+        red_ttft, red_tpot = [], []
+        for key, (ttft, tpot) in results.items():
+            if key[3] != "fastlibra":
+                continue
+            b = results.get((key[0], key[1], key[2], base))
+            if b and b[0] > 0:
+                red_ttft.append(1.0 - ttft / b[0])
+            if b and b[1] > 0:
+                red_tpot.append(1.0 - tpot / b[1])
+        if red_ttft:
+            out.emit(
+                f"fig11/summary/ttft_reduction_vs_{base}",
+                sum(red_ttft) / len(red_ttft) * 100,
+                f"paper=60.3%_vllm/50.1%_slora;tpot_red="
+                f"{sum(red_tpot)/len(red_tpot)*100:.1f}%",
+            )
+    # peak throughput (7B-50, chatbot)
+    peaks = {}
+    for sysname in SYSTEMS:
+        peaks[sysname] = peak_throughput("llama-7b", "chatbot", sysname, 50)
+        out.emit(f"fig11/peak_qps/chatbot/7b-50/{sysname}", peaks[sysname] * 1e6,
+                 "ttft_slo=500ms")
+    for base in ("vllm", "slora"):
+        if peaks[base] > 0:
+            out.emit(f"fig11/summary/peak_vs_{base}",
+                     peaks["fastlibra"] / peaks[base],
+                     "paper=1.7x_vllm/1.6x_slora")

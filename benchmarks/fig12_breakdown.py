@@ -1,0 +1,16 @@
+"""Fig. 12 — TTFT breakdown: queue / LoRA cold-start / KV cold-start."""
+
+from .common import CsvOut, run_sim
+
+
+def run(out: CsvOut) -> None:
+    for scenario in ("chatbot", "translation", "agent"):
+        for sysname in ("fastlibra", "vllm", "slora"):
+            res = run_sim("llama-7b", scenario, sysname, n_loras=50)
+            out.emit(
+                f"fig12/{scenario}/{sysname}/breakdown",
+                res.avg_ttft * 1e6,
+                f"queue_ms={res.avg_queue*1e3:.2f};"
+                f"lora_cold_ms={res.avg_lora_coldstart*1e3:.2f};"
+                f"kv_cold_ms={res.avg_kv_coldstart*1e3:.2f}",
+            )

@@ -1,0 +1,38 @@
+"""Fig. 13 — average HBM utilization and LoRA/KV cache hit rates."""
+
+import statistics
+
+from .common import CsvOut, run_sim
+
+
+def run(out: CsvOut) -> None:
+    agg = {}
+    for scenario in ("chatbot", "translation", "agent"):
+        for sysname in ("fastlibra", "vllm", "slora"):
+            res = run_sim("llama-7b", scenario, sysname, n_loras=50)
+            s = res.summary()
+            agg.setdefault(sysname, []).append(s)
+            out.emit(
+                f"fig13/{scenario}/{sysname}",
+                s["avg_hbm_usage"] * 1e6,
+                f"kv_hit={s['kv_hit_rate']:.3f};lora_hit={s['lora_hit_rate']:.3f};"
+                f"invalid_kv={s['avg_invalid_kv']:.3f}",
+            )
+    fl = agg["fastlibra"]
+    for base in ("vllm", "slora"):
+        b = agg[base]
+        util_x = statistics.fmean(x["avg_hbm_usage"] for x in fl) / max(
+            1e-9, statistics.fmean(x["avg_hbm_usage"] for x in b)
+        )
+        hit_fl = statistics.fmean(
+            x["kv_hit_rate"] + x["lora_hit_rate"] for x in fl
+        )
+        hit_b = statistics.fmean(
+            x["kv_hit_rate"] + x["lora_hit_rate"] for x in b
+        )
+        out.emit(
+            f"fig13/summary/vs_{base}",
+            util_x,
+            f"hbm_util_x={util_x:.2f} (paper 1.2x vllm / 2.6x slora); "
+            f"hit_x={hit_fl/max(1e-9,hit_b):.2f} (paper 1.3x / 3.2x)",
+        )

@@ -1,0 +1,22 @@
+"""Fig. 14 — HBM allocation over time (history KV / LoRA / running KV)."""
+
+from .common import CsvOut, run_sim
+
+
+def run(out: CsvOut) -> None:
+    for sysname in ("fastlibra", "vllm", "slora"):
+        res = run_sim("llama-7b", "chatbot", sysname, n_loras=100)
+        # report quartile snapshots of the timeline
+        tl = res.timeline
+        for frac in (0.1, 0.4, 0.7, 1.0):
+            i = min(len(tl) - 1, int(frac * len(tl)) - 1)
+            t = tl[i]
+            tot = max(1, t["total_bytes"])
+            out.emit(
+                f"fig14/{sysname}/t{int(frac*100)}",
+                t["t"] * 1e6,
+                f"hist_kv={t['history_kv_bytes']/tot:.3f};"
+                f"lora={t['lora_bytes']/tot:.3f};"
+                f"running={t['running_kv_bytes']/tot:.3f};"
+                f"resident_loras={t['resident_loras']}",
+            )

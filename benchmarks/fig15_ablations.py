@@ -1,0 +1,27 @@
+"""Fig. 15 — ablations: FASTLIBRA-WOM / -WOS / -WOL normalized TTFT/TPOT.
+
+Also reports the paper-literal Eval ordering (fastlibra-paper) vs the
+density-ordering correction (EXPERIMENTS.md §Perf-policy).
+"""
+
+from .common import CsvOut, run_sim
+
+
+def run(out: CsvOut) -> None:
+    # 300 adapters: enough inter-LoRA pressure that dependency maintenance
+    # and the LoRA-quantity reward have something to do (paper uses dynamic
+    # production-trace popularity for the same reason)
+    for scenario in ("chatbot", "translation", "agent"):
+        base = run_sim("llama-7b", scenario, "fastlibra", n_loras=300)
+        for variant in ("wom", "wos", "wol", "fastlibra-paper"):
+            res = run_sim("llama-7b", scenario, variant, n_loras=300)
+            nt = res.avg_ttft / max(1e-9, base.avg_ttft)
+            np_ = res.avg_tpot / max(1e-9, base.avg_tpot)
+            extra = ""
+            if variant == "wom":
+                extra = f";invalid_kv={res.summary()['avg_invalid_kv']:.3f}"
+            out.emit(
+                f"fig15/{scenario}/{variant}",
+                res.avg_ttft * 1e6,
+                f"norm_ttft={nt:.3f};norm_tpot={np_:.3f}{extra}",
+            )

@@ -1,0 +1,21 @@
+"""Fig. 16 — 1000/2000 adapters under uniform / distinct / skewed loads."""
+
+from .common import CsvOut, QUICK, run_sim
+
+
+def run(out: CsvOut) -> None:
+    counts = (1000,) if QUICK else (1000, 2000)
+    dists = ("uniform", "distinct", "skewed")
+    for n in counts:
+        for dist in dists:
+            for sysname in ("fastlibra", "vllm", "slora"):
+                res = run_sim(
+                    "llama-7b", "chatbot", sysname, n_loras=n, dist=dist,
+                    duration=120.0 if QUICK else 240.0,
+                )
+                out.emit(
+                    f"fig16/{n}-{dist}/{sysname}",
+                    res.avg_ttft * 1e6,
+                    f"tpot_ms={res.avg_tpot*1e3:.2f};"
+                    f"lora_hit={res.summary()['lora_hit_rate']:.3f}",
+                )

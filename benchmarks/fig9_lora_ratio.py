@@ -1,0 +1,47 @@
+"""Fig. 9 — vLLM TTFT vs the static HBM ratio allocated to LoRAs.
+
+Sweeps the partition ratio at 50 and 100 adapters: TTFT falls until a
+load-dependent target ratio, showing no single static split is right.
+"""
+
+from repro.core.cache_manager import ManagerConfig
+import repro.core.swapper as swmod
+
+from .common import CsvOut, QUICK, run_sim
+
+
+def run(out: CsvOut) -> None:
+    ratios = (0.1, 0.3) if QUICK else (0.05, 0.1, 0.2, 0.3, 0.4)
+    orig = swmod.make_fastlibra
+    for n_loras in (50, 100):
+        for ratio in ratios:
+            def patched(hbm, host, *, kv_bytes_per_token, block_size=32,
+                        hardware=None, variant="vllm", _r=ratio):
+                from repro.core.cache_manager import CacheManager
+                from repro.core.swapper import CacheSwapper, SwapperConfig
+
+                cfg = ManagerConfig(
+                    block_size=block_size,
+                    kv_bytes_per_token=kv_bytes_per_token,
+                    maintain_dependencies=False,
+                    unified_pool=False,
+                    use_cost_model=False,
+                    lora_partition_ratio=_r,
+                )
+                mgr = CacheManager(cfg, hbm, host, hardware=hardware)
+                return mgr, CacheSwapper(mgr, SwapperConfig(enabled=False))
+
+            swmod.make_fastlibra = patched
+            import repro.sim.simulator as simmod
+
+            simmod.make_fastlibra = patched
+            try:
+                res = run_sim("llama-7b", "chatbot", "vllm", n_loras=n_loras)
+            finally:
+                swmod.make_fastlibra = orig
+                simmod.make_fastlibra = orig
+            out.emit(
+                f"fig9/ratio_{ratio}/loras_{n_loras}",
+                res.avg_ttft * 1e6,
+                f"lora_hit={res.summary()['lora_hit_rate']:.3f}",
+            )

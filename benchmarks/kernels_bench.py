@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On this CPU container the numbers validate plumbing, not TPU speed; the
+roofline analysis (benchmarks/roofline.py) covers projected TPU performance.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_prefill, paged_attention, ref, sgmv
+
+from .common import CsvOut
+
+
+def _time(fn, *args, reps=5, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(out: CsvOut) -> None:
+    key = jax.random.PRNGKey(0)
+    # sgmv: decode-shaped batch
+    B, S, d, r, o, N = 8, 1, 512, 32, 512, 8
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    a = jax.random.normal(ks[1], (N, d, r), jnp.float32)
+    b = jax.random.normal(ks[2], (N, r, o), jnp.float32)
+    ids = jax.random.randint(ks[3], (B,), 0, N)
+    t_k = _time(sgmv, x, a, b, ids, interpret=True)
+    t_r = _time(ref.sgmv_ref, x, a, b, ids)
+    out.emit("kernels/sgmv_decode", t_k, f"ref_us={t_r:.1f};B={B};d={d};r={r}")
+    # paged attention
+    q = jax.random.normal(ks[0], (4, 8, 64), jnp.float32)
+    kp = jax.random.normal(ks[1], (32, 16, 2, 64), jnp.float32)
+    vp = jax.random.normal(ks[2], (32, 16, 2, 64), jnp.float32)
+    tables = jax.random.permutation(ks[3], 32)[:16].reshape(4, 4).astype(jnp.int32)
+    lens = jnp.array([64, 50, 33, 7], jnp.int32)
+    t_k = _time(paged_attention, q, kp, vp, tables, lens, interpret=True)
+    t_r = _time(ref.paged_attention_ref, q, kp, vp, tables, lens)
+    out.emit("kernels/paged_attention", t_k, f"ref_us={t_r:.1f};B=4;pages=4x16")
+    # flash prefill
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    t_k = _time(flash_prefill, q, k, v, block_q=64, block_k=64, interpret=True)
+    t_r = _time(ref.flash_prefill_ref, q, k, v)
+    out.emit("kernels/flash_prefill", t_k, f"ref_us={t_r:.1f};S=256;D=64")

@@ -1,0 +1,68 @@
+"""End-to-end multi-LoRA serving driver (the paper's setting, real JAX).
+
+Runs the continuous-batching ServingEngine with FASTLIBRA cache management:
+multi-turn conversations across several adapters, prefix KV reuse through
+the dependency tree, proactive swapping via the cost-model swapper. Prints
+the per-request latencies and the serving report.
+
+    PYTHONPATH=src python examples/multi_lora_serving.py \
+        [--variant fastlibra|vllm|slora] [--requests 12]
+"""
+
+import argparse
+import random
+
+import jax
+
+from repro import configs
+from repro.serving import EngineConfig, Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="fastlibra")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--adapters", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    engine = ServingEngine(
+        cfg,
+        EngineConfig(
+            hbm_bytes=8 << 20, host_bytes=64 << 20, block_size=4,
+            max_batch_slots=4, max_seq_len=128, variant=args.variant,
+        ),
+        key=jax.random.PRNGKey(args.seed),
+    )
+    for i in range(args.adapters):
+        engine.register_adapter(f"lora-{i}")
+
+    rng = random.Random(args.seed)
+    conversations: dict[int, tuple] = {}
+    rid = 0
+    for _ in range(args.requests):
+        conv = rng.randrange(max(1, args.requests // 2))
+        adapter = f"lora-{conv % args.adapters}"
+        history = conversations.get(conv, ())
+        new = tuple(rng.randrange(10, 200) for _ in range(rng.randint(4, 10)))
+        prompt = history + new
+        rid += 1
+        req = Request(f"r{rid}", adapter, prompt, max_new_tokens=6)
+        engine.submit(req)
+        report = engine.run()
+        conversations[conv] = req.full_tokens
+        print(f"r{rid} conv={conv} adapter={adapter} prompt={len(prompt)}t "
+              f"matched={req.matched_tokens}t ttft={req.ttft*1e3:7.1f}ms "
+              f"tpot={req.tpot*1e3 if req.tpot else 0:6.2f}ms "
+              f"gen={req.generated}")
+
+    print("\n=== serving report ===")
+    for k, v in report.row().items():
+        print(f"{k:22s} {v:.4f}" if isinstance(v, float) else f"{k:22s} {v}")
+    engine.manager.check_invariants()
+    print("cache-manager invariants: OK (zero invalid KVs)")
+
+
+if __name__ == "__main__":
+    main()

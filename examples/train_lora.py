@@ -1,0 +1,68 @@
+"""Train LoRA adapters on a frozen base model (~100M-class reduced config)
+for a few hundred steps with async checkpointing and crash-safe resume.
+
+    PYTHONPATH=src python examples/train_lora.py [--steps 200] [--arch gemma-2b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed import CheckpointManager
+from repro.models import build_model, make_train_state, make_train_step
+
+
+def synthetic_batch(key, vocab: int, batch: int, seq: int, n_adapters: int):
+    """Deterministic per-adapter token distributions: each adapter's 'task'
+    biases the label stream so LoRA-only training has signal."""
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, vocab)
+    adapter_ids = jax.random.randint(k2, (batch,), 0, n_adapters)
+    labels = (tokens * 31 + adapter_ids[:, None] * 7 + 1) % vocab
+    return {"tokens": tokens, "labels": labels, "adapter_ids": adapter_ids}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=configs.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lora_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(configs.get(args.arch))
+    model = build_model(cfg, dtype=jnp.float32)
+    state = make_train_state(model, jax.random.PRNGKey(0), n_lora_slots=4,
+                             train_lora_only=True)
+    step_fn = jax.jit(make_train_step(model, lr=3e-3, train_lora_only=True))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        state = mgr.restore(latest, jax.eval_shape(lambda: state))
+        start = latest
+        print(f"resumed from checkpoint step {latest}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = synthetic_batch(jax.random.PRNGKey(step), cfg.vocab_size,
+                                args.batch, args.seq, 4)
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % 20 == 0:
+            print(f"step {step+1:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(step-start+1)*1e3:.0f} ms/step)")
+        if (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step + 1, state)
+    mgr.wait()
+    print(f"done; adapters trained LoRA-only (base frozen), "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Regenerate the EXPERIMENTS.md §Roofline table from results/dryrun."""
+
+import pathlib
+import re
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import load_records, markdown_table  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def main() -> None:
+    recs = load_records()
+    baselines = [r for r in recs if not r.get("opts")]
+    opts = [r for r in recs if r.get("opts")]
+    n_ok = sum(1 for r in baselines if r.get("status") == "ok")
+    header = (
+        f"\n*{len(baselines)} baseline cells compiled "
+        f"({n_ok} ok) + {len(opts)} optimized §Perf variants; regenerate with "
+        f"`python scripts/update_experiments.py`.*\n\n"
+    )
+    table = header + markdown_table(baselines) + (
+        "\n\nOptimized (§Perf) variants:\n\n" + markdown_table(opts) if opts else ""
+    )
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    begin, end = "<!-- ROOFLINE-TABLE -->", "<!-- /ROOFLINE-TABLE -->"
+    i, j = md.index(begin) + len(begin), md.index(end)
+    md = md[:i] + "\n" + table + "\n" + md[j:]
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print(f"updated EXPERIMENTS.md with {len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()

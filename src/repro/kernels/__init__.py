@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the serving hot-spots (validated in interpret mode
+on CPU, compiled via Mosaic on TPU):
+
+* ``sgmv``            — multi-LoRA batched matmul (adapter gather in the
+                        BlockSpec index map; Punica/S-LoRA's SGMV, TPU-native)
+* ``paged_attention`` — decode attention over the paged KV pool (block-table
+                        indirection via scalar prefetch)
+* ``flash_prefill``   — causal flash attention for prefill
+"""
+
+from . import ref
+from .ops import flash_prefill, paged_attention, sgmv
+
+__all__ = ["flash_prefill", "paged_attention", "sgmv", "ref"]

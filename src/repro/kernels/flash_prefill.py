@@ -1,0 +1,116 @@
+"""Causal flash attention (prefill) as a Pallas TPU kernel.
+
+Standard two-level tiling: grid (B, H, q_blocks, kv_blocks); the kv-block
+dimension is innermost/sequential, carrying flash running statistics in VMEM
+scratch. GQA is handled in the index map (kv head = q head // G) so KV tiles
+are fetched once per group, not per q head. Blocks above the causal diagonal
+contribute nothing and are masked (TPU grids cannot be ragged; the masked
+blocks are the price of a static grid — see EXPERIMENTS.md §Perf for the
+block-skip optimization).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, bq, D)
+    acc_ref,  # (bq, D) f32
+    m_ref,  # (bq, 1) f32
+    l_ref,  # (bq, 1) f32
+    *,
+    block_q: int,
+    block_k: int,
+    kv_blocks: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    @pl.when(j * block_k <= i * block_q + block_q - 1)  # skip above-diagonal
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        D = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+            jnp.float32(D)
+        )
+        s = jnp.where(k_idx <= q_idx, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(j == kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_prefill(
+    q: Array,  # (B, H, S, D)
+    k: Array,  # (B, Hkv, S, D)
+    v: Array,  # (B, Hkv, S, D)
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    kv_blocks = pl.cdiv(S, bk)
+    grid = (B, H, pl.cdiv(S, bq), kv_blocks)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_q=bq, block_k=bk, kv_blocks=kv_blocks
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on TPU they compile to
+Mosaic. ``interpret`` defaults to auto-detection.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_prefill import flash_prefill as _flash
+from .paged_attention import paged_attention as _paged
+from .sgmv import sgmv as _sgmv
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def sgmv(x, lora_a, lora_b, adapter_ids, *, scale: float = 1.0,
+         block_s: int = 128, block_o: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _sgmv(x, lora_a, lora_b, adapter_ids, scale=scale,
+                 block_s=block_s, block_o=block_o, interpret=interpret)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _paged(q, k_pages, v_pages, block_tables, lengths, interpret=interpret)
+
+
+def flash_prefill(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                  interpret: bool | None = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _flash(q, k, v, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+__all__ = ["sgmv", "paged_attention", "flash_prefill", "ref"]

@@ -1,0 +1,119 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+vLLM's CUDA paged attention gathers KV pages with per-warp loads. The TPU
+adaptation (DESIGN.md §3) keeps the KV pool as dense
+``(num_pages, page_size, Hkv, D)`` arrays in HBM and streams one page per
+grid step into VMEM, with the page indirection performed by the **scalar-
+prefetched block table inside the BlockSpec index map** — the TPU-idiomatic
+replacement for pointer-chasing. Softmax is computed online (flash-style
+running max / sum in VMEM scratch) across the page-grid dimension, which is
+sequential on TPU, so the accumulator carries across pages of one sequence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    tables_ref,  # scalar prefetch: (B, pages_per_seq) int32
+    lens_ref,  # scalar prefetch: (B,) int32
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, page, 1, D)
+    v_ref,  # (1, page, 1, D)
+    o_ref,  # (1, 1, G, D)
+    acc_ref,  # VMEM scratch (G, D) f32
+    m_ref,  # VMEM scratch (G, 1) f32
+    l_ref,  # VMEM scratch (G, 1) f32
+    *,
+    page_size: int,
+    pages_per_seq: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+    D = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(D)
+    )  # (G, page)
+    # mask tokens beyond the sequence length
+    token_idx = p * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    s = jnp.where(token_idx < lens_ref[b], s, NEG_INF)
+    m_prev = m_ref[...]  # (G, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p_ij = jnp.exp(s - m_cur)  # (G, page)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p_ij, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p_ij, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(p == pages_per_seq - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: Array,  # (B, H, D)
+    k_pages: Array,  # (P, page_size, Hkv, D)
+    v_pages: Array,  # (P, page_size, Hkv, D)
+    block_tables: Array,  # (B, pages_per_seq) int32
+    lengths: Array,  # (B,) int32
+    *,
+    interpret: bool = False,
+) -> Array:
+    B, H, D = q.shape
+    P, page_size, Hkv, _ = k_pages.shape
+    pages_per_seq = block_tables.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, pages_per_seq)
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_attn_kernel, page_size=page_size, pages_per_seq=pages_per_seq
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, p, t, l: (b, h, 0, 0)),
+                pl.BlockSpec(
+                    (1, page_size, 1, D), lambda b, h, p, t, l: (t[b, p], 0, h, 0)
+                ),
+                pl.BlockSpec(
+                    (1, page_size, 1, D), lambda b, h, p, t, l: (t[b, p], 0, h, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p, t, l: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, D), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sgmv_ref(
+    x: Array,  # (B, S, d_in)
+    lora_a: Array,  # (N, d_in, r)
+    lora_b: Array,  # (N, r, d_out)
+    adapter_ids: Array,  # (B,) int32
+    scale: float = 1.0,
+) -> Array:
+    """Multi-LoRA delta: Δ[b] = (x[b] @ A[id[b]]) @ B[id[b]] · scale."""
+    a = jnp.take(lora_a, adapter_ids, axis=0)
+    b = jnp.take(lora_b, adapter_ids, axis=0)
+    h = jnp.einsum("bsd,bdr->bsr", x.astype(jnp.float32), a.astype(jnp.float32))
+    out = jnp.einsum("bsr,bro->bso", h, b.astype(jnp.float32)) * scale
+    return out.astype(x.dtype)
+
+
+def paged_attention_ref(
+    q: Array,  # (B, H, D)
+    k_pages: Array,  # (P, page_size, Hkv, D)
+    v_pages: Array,  # (P, page_size, Hkv, D)
+    block_tables: Array,  # (B, pages_per_seq) int32
+    lengths: Array,  # (B,) int32 — tokens in each sequence
+) -> Array:
+    """Single-token decode attention over a paged KV pool."""
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    pages_per_seq = block_tables.shape[1]
+    G = H // Hkv
+    # gather pages: (B, pages_per_seq, page, Hkv, D) -> (B, T, Hkv, D)
+    k = jnp.take(k_pages, block_tables, axis=0).reshape(B, pages_per_seq * page, Hkv, D)
+    v = jnp.take(v_pages, block_tables, axis=0).reshape(B, pages_per_seq * page, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    T = pages_per_seq * page
+    valid = jnp.arange(T)[None, :] < lengths[:, None]  # (B, T)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def flash_prefill_ref(
+    q: Array,  # (B, H, S, D)
+    k: Array,  # (B, Hkv, S, D)
+    v: Array,  # (B, Hkv, S, D)
+) -> Array:
+    """Causal full-sequence attention (flash oracle)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, S, D)
+    logits = jnp.einsum(
+        "bkgsd,bktd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(D))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,13 @@
+"""Paged KV cache + SSM state-snapshot substrate."""
+
+from .paged import KVPoolSpec, PagedKVPool
+from .state_cache import StateCache, StateSpec, flatten_state, state_floats
+
+__all__ = [
+    "KVPoolSpec",
+    "PagedKVPool",
+    "StateCache",
+    "StateSpec",
+    "flatten_state",
+    "state_floats",
+]

@@ -1,0 +1,118 @@
+"""Physical paged KV store: two-tier (device + host) block arrays.
+
+The control plane (``repro.core.BlockPool``) hands out integer block ids;
+this module maps them to rows of physical arrays:
+
+* HBM tier  — jnp arrays ``(L, n_hbm_blocks, block_size, Hkv, D)`` (k and v)
+* host tier — numpy arrays ``(L, n_host_blocks, block_size, Hkv, D)``
+
+Running queries use *dense* per-sequence caches (the model's native layout);
+the pool is touched at admission (gather prefix blocks → dense) and at
+commit (scatter the new suffix → blocks), mirroring the paper's running-KV /
+history-KV split (Fig. 14). Swap ops copy rows between tiers (host↔device
+transfers — what PCIe does on the paper's platform).
+
+MLA archs store (latent ‖ k_rope) in the k array with Hkv=1 and
+D = kv_lora_rank + rope_dim (v array unused); SSM archs use
+``state_cache.StateCache`` instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class KVPoolSpec:
+    num_layers: int
+    block_size: int  # tokens per block
+    kv_heads: int
+    head_dim: int
+    dtype: jnp.dtype = jnp.float32
+    use_v: bool = True  # False for MLA (latent-only)
+
+    @property
+    def bytes_per_token(self) -> int:
+        per = self.num_layers * self.kv_heads * self.head_dim
+        per *= 2 if self.use_v else 1
+        return per * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def block_bytes(self) -> int:
+        return self.bytes_per_token * self.block_size
+
+
+class PagedKVPool:
+    """Two-tier physical KV block store."""
+
+    def __init__(self, spec: KVPoolSpec, n_hbm_blocks: int, n_host_blocks: int):
+        self.spec = spec
+        s = spec
+        shape_hbm = (s.num_layers, n_hbm_blocks, s.block_size, s.kv_heads, s.head_dim)
+        shape_host = (s.num_layers, n_host_blocks, s.block_size, s.kv_heads, s.head_dim)
+        self.k_hbm = jnp.zeros(shape_hbm, s.dtype)
+        self.v_hbm = jnp.zeros(shape_hbm, s.dtype) if s.use_v else None
+        self.k_host = np.zeros(shape_host, s.dtype)
+        self.v_host = np.zeros(shape_host, s.dtype) if s.use_v else None
+        self.swap_in_bytes = 0
+        self.swap_out_bytes = 0
+
+    # ------------------------------------------------------------- gather
+    def gather(self, block_ids: Sequence[int]) -> tuple[Array, Optional[Array]]:
+        """HBM blocks → dense (L, T, Hkv, D)."""
+        idx = jnp.asarray(list(block_ids), jnp.int32)
+        s = self.spec
+        k = jnp.take(self.k_hbm, idx, axis=1)  # (L, n, bs, H, D)
+        k = k.reshape(s.num_layers, -1, s.kv_heads, s.head_dim)
+        v = None
+        if self.v_hbm is not None:
+            v = jnp.take(self.v_hbm, idx, axis=1).reshape(
+                s.num_layers, -1, s.kv_heads, s.head_dim
+            )
+        return k, v
+
+    # ------------------------------------------------------------ scatter
+    def scatter(
+        self,
+        block_ids: Sequence[int],
+        k_dense: Array,  # (L, T, Hkv, D) — T must be len(block_ids)*block_size
+        v_dense: Optional[Array] = None,
+    ) -> None:
+        s = self.spec
+        n = len(block_ids)
+        idx = jnp.asarray(list(block_ids), jnp.int32)
+        kb = k_dense.reshape(s.num_layers, n, s.block_size, s.kv_heads, s.head_dim)
+        self.k_hbm = self.k_hbm.at[:, idx].set(kb.astype(s.dtype))
+        if self.v_hbm is not None and v_dense is not None:
+            vb = v_dense.reshape(s.num_layers, n, s.block_size, s.kv_heads, s.head_dim)
+            self.v_hbm = self.v_hbm.at[:, idx].set(vb.astype(s.dtype))
+
+    # --------------------------------------------------------------- swaps
+    def swap_out(self, hbm_blocks: Sequence[int], host_blocks: Sequence[int]) -> None:
+        """Copy HBM rows to host rows (device→host transfer)."""
+        hb = list(hbm_blocks)
+        dst = list(host_blocks)
+        k_rows = np.asarray(jnp.take(self.k_hbm, jnp.asarray(hb), axis=1))
+        self.k_host[:, dst] = k_rows
+        if self.v_hbm is not None:
+            v_rows = np.asarray(jnp.take(self.v_hbm, jnp.asarray(hb), axis=1))
+            self.v_host[:, dst] = v_rows
+        self.swap_out_bytes += k_rows.nbytes * (2 if self.v_hbm is not None else 1)
+
+    def swap_in(self, host_blocks: Sequence[int], hbm_blocks: Sequence[int]) -> None:
+        """Copy host rows to HBM rows (host→device transfer)."""
+        src = list(host_blocks)
+        dst = jnp.asarray(list(hbm_blocks), jnp.int32)
+        k_rows = jnp.asarray(self.k_host[:, src])
+        self.k_hbm = self.k_hbm.at[:, dst].set(k_rows)
+        if self.v_hbm is not None:
+            v_rows = jnp.asarray(self.v_host[:, src])
+            self.v_hbm = self.v_hbm.at[:, dst].set(v_rows)
+        self.swap_in_bytes += k_rows.nbytes * (2 if self.v_hbm is not None else 1)

@@ -1,0 +1,91 @@
+"""Prefix *state* caching for SSM/hybrid architectures (beyond-paper).
+
+RWKV-6 and RG-LRU have O(1) recurrent state instead of a per-token KV
+cache. FASTLIBRA's dependency tree generalizes directly: a KV node becomes a
+**state snapshot node** — the recurrent state at a prefix boundary. Matching
+a prefix returns the deepest snapshot; decoding resumes from it (no
+recompute), exactly like KV reuse. Snapshot nodes are fixed-size, so one
+snapshot occupies ``ceil(state_bytes / block_bytes)`` pool blocks.
+
+This file provides the host/device snapshot store keyed by pool block ids,
+mirroring ``PagedKVPool``'s two-tier layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class StateSpec:
+    """Flattened recurrent-state snapshot layout."""
+
+    state_floats: int  # total f32 elements of one sequence's full-model state
+    block_bytes: int  # unified pool block size (bytes)
+
+    @property
+    def blocks_per_snapshot(self) -> int:
+        return -(-self.state_floats * 4 // self.block_bytes)
+
+
+class StateCache:
+    """Two-tier store of flattened state snapshots, block-addressed."""
+
+    def __init__(self, spec: StateSpec, n_hbm_blocks: int, n_host_blocks: int):
+        self.spec = spec
+        per_block = spec.block_bytes // 4
+        self.per_block = per_block
+        self.hbm = jnp.zeros((n_hbm_blocks, per_block), jnp.float32)
+        self.host = np.zeros((n_host_blocks, per_block), np.float32)
+
+    def store(self, block_ids: Sequence[int], flat_state: Array) -> None:
+        pad = len(block_ids) * self.per_block - flat_state.shape[0]
+        flat = jnp.pad(flat_state, (0, pad))
+        rows = flat.reshape(len(block_ids), self.per_block)
+        self.hbm = self.hbm.at[jnp.asarray(list(block_ids))].set(rows)
+
+    def load(self, block_ids: Sequence[int], n_floats: int) -> Array:
+        rows = jnp.take(self.hbm, jnp.asarray(list(block_ids)), axis=0)
+        return rows.reshape(-1)[:n_floats]
+
+    def swap_out(self, hbm_blocks: Sequence[int], host_blocks: Sequence[int]) -> None:
+        self.host[list(host_blocks)] = np.asarray(
+            jnp.take(self.hbm, jnp.asarray(list(hbm_blocks)), axis=0)
+        )
+
+    def swap_in(self, host_blocks: Sequence[int], hbm_blocks: Sequence[int]) -> None:
+        rows = jnp.asarray(self.host[list(host_blocks)])
+        self.hbm = self.hbm.at[jnp.asarray(list(hbm_blocks))].set(rows)
+
+
+def flatten_state(cache: dict, row: int) -> Array:
+    """Flatten one batch row of a model cache pytree (minus 'len')."""
+    leaves = [v for k, v in sorted(cache.items()) if k != "len"]
+    return jnp.concatenate(
+        [jnp.ravel(l[:, row] if l.ndim > 1 else l[row]).astype(jnp.float32)
+         for l in leaves]
+    )
+
+
+def state_floats(cfg, batch: int = 1) -> int:
+    """Size (f32 elements) of one sequence's full recurrent state."""
+    if cfg.rwkv is not None:
+        hd = cfg.rwkv.head_dim
+        H = cfg.d_model // hd
+        per_layer = H * hd * hd + 2 * cfg.d_model
+        return per_layer * cfg.num_layers
+    if cfg.rglru is not None:
+        pat = cfg.rglru.block_pattern
+        n_rec = sum(
+            1 for i in range(cfg.num_layers) if pat[i % len(pat)] == "rec"
+        )
+        w = cfg.rglru.lru_width or cfg.d_model
+        return n_rec * (w + (cfg.rglru.conv_width - 1) * w)
+    raise ValueError("state caching applies to SSM/hybrid archs only")

@@ -1,0 +1,68 @@
+"""Serving launcher: run the multi-LoRA engine on any assigned architecture.
+
+On this CPU container the engine serves the reduced config (full configs are
+exercised via dryrun.py). On a TPU deployment the same entry point shards
+params/caches over the production mesh with repro.distributed.sharding.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --variant fastlibra --requests 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+
+import jax
+
+from repro import configs
+from repro.distributed import RequestJournal
+from repro.serving import EngineConfig, Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=configs.ARCH_IDS)
+    ap.add_argument("--variant", default="fastlibra")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--adapters", type=int, default=4)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full architecture config (TPU-scale)")
+    ap.add_argument("--journal", default="/tmp/repro_serve_journal.jsonl")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if not args.full_config:
+        cfg = configs.reduced(cfg)
+    engine = ServingEngine(
+        cfg,
+        EngineConfig(hbm_bytes=8 << 20, host_bytes=64 << 20, block_size=4,
+                     max_batch_slots=4, max_seq_len=128, variant=args.variant),
+        key=jax.random.PRNGKey(args.seed),
+    )
+    for i in range(args.adapters):
+        engine.register_adapter(f"lora-{i}")
+    journal = RequestJournal(args.journal)
+
+    # crash recovery: re-enqueue whatever a previous process left in flight
+    for ev in journal.replay():
+        engine.submit(Request(ev["rid"] + "-replayed", ev["adapter"],
+                              tuple(ev["prompt"]), ev["max_new"]))
+        print(f"replayed in-flight request {ev['rid']}")
+
+    rng = random.Random(args.seed)
+    for i in range(args.requests):
+        rid = f"req-{i}"
+        adapter = f"lora-{rng.randrange(args.adapters)}"
+        prompt = tuple(rng.randrange(10, 200) for _ in range(rng.randint(6, 14)))
+        journal.record_submit(rid, adapter, prompt, 6)
+        engine.submit(Request(rid, adapter, prompt, max_new_tokens=6))
+    report = engine.run()
+    for r in engine.finished:
+        journal.record_finish(r.request_id)
+    print("report:", report.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation: params/optimizer/cache trees come from
+``jax.eval_shape`` over the real init functions; batches are synthesized
+directly. Modality frontends are stubs per the assignment: seamless gets
+precomputed frame embeddings, qwen2-vl gets patch-embedding ``extra_embeds``
+plus M-RoPE position ids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import build_model, make_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeConfig, n_lora: int = 8) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if kind in ("decode", "long_decode"):
+        batch = {
+            "tokens": SDS((B, 1), jnp.int32),
+            "adapter_ids": SDS((B,), jnp.int32),
+        }
+        if cfg.mrope_sections is not None:
+            batch["mrope_positions"] = SDS((3, B, 1), jnp.int32)
+        return batch
+    batch = {
+        "tokens": SDS((B, S), jnp.int32),
+        "adapter_ids": SDS((B,), jnp.int32),
+    }
+    if kind == "train":
+        batch["labels"] = SDS((B, S), jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = SDS((B, S // 4, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        batch["extra_embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        batch["mrope_positions"] = SDS((3, B, S), jnp.int32)
+    return batch
+
+
+def model_state_specs(cfg: ModelConfig, shape: ShapeConfig, n_lora: int = 8,
+                      opts: dict | None = None):
+    """eval_shape trees for params / lora / cache / train state as needed.
+    ``opts``: §Perf knobs forwarded to build_model (q_chunk, remat_policy)."""
+    opts = opts or {}
+    model = build_model(cfg, dtype=jnp.bfloat16, remat=(shape.kind == "train"),
+                        unroll=True, **opts)
+    key = jax.random.PRNGKey(0)
+    out: dict = {"model": model}
+    if shape.kind == "train":
+        out["train_state"] = jax.eval_shape(
+            lambda k: make_train_state(model, k, n_lora_slots=n_lora), key
+        )
+        return out
+    out["params"] = jax.eval_shape(model.init_params, key)
+    out["lora"] = jax.eval_shape(lambda k: model.init_lora(k, n_lora), key)
+    if shape.kind in ("decode", "long_decode"):
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.is_encdec:
+            out["cache"] = jax.eval_shape(
+                lambda: model.init_cache(B, S, src_len=max(1, S // 4))
+            )
+        else:
+            out["cache"] = jax.eval_shape(lambda: model.init_cache(B, S))
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    n = cfg.active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,5 @@
+"""Multi-LoRA substrate: adapter store + batched application."""
+
+from .adapter import AdapterStore, AdapterWeights
+
+__all__ = ["AdapterStore", "AdapterWeights"]

@@ -1,0 +1,25 @@
+"""Composable model zoo covering every assigned architecture family."""
+
+from .encdec import EncDecLM
+from .model import (
+    TrainState,
+    build_model,
+    cross_entropy,
+    make_decode_step,
+    make_prefill_step,
+    make_train_state,
+    make_train_step,
+)
+from .transformer import LM
+
+__all__ = [
+    "EncDecLM",
+    "LM",
+    "TrainState",
+    "build_model",
+    "cross_entropy",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_state",
+    "make_train_step",
+]

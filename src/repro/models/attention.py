@@ -1,0 +1,437 @@
+"""Attention variants: GQA/MQA (+qk-norm, sliding window, M-RoPE) and
+DeepSeek multi-head latent attention (MLA), all cache-aware.
+
+Conventions
+-----------
+* params are flat dicts of arrays for ONE layer; the transformer stacks them
+  along a leading layer axis and slices inside ``lax.scan``.
+* ``lora`` is an optional dict {target: (A, B)} with A:(slots,d_in,r),
+  B:(slots,r,d_out); ``adapter_ids``:(B,) selects the slot per sequence
+  (multi-LoRA batching — SGMV semantics).
+* caches are dicts of arrays; decode writes one token per call at
+  ``cache_len`` (B,) row offsets.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import (
+    apply_mrope,
+    apply_rope,
+    causal_mask,
+    dense_init,
+    init_rms,
+    lora_delta,
+    rms_norm,
+    window_mask,
+)
+
+Array = jax.Array
+
+
+def _proj(x, w, lora, name, adapter_ids, scale):
+    y = x @ w
+    if lora is not None and name in lora and adapter_ids is not None:
+        a, b = lora[name]
+        y = y + lora_delta(x, a, b, adapter_ids, scale)
+    return y
+
+
+# =============================================================== GQA / MQA
+def init_gqa(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd, dtype)
+        p["k_norm"] = init_rms(hd, dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, lora, adapter_ids, lora_scale,
+         mrope_positions=None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = _proj(x, p["wq"], lora, "q", adapter_ids, lora_scale)
+    k = _proj(x, p["wk"], lora, "k", adapter_ids, lora_scale)
+    v = _proj(x, p["wv"], lora, "v", adapter_ids, lora_scale)
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q: Array, k: Array, v: Array, mask: Array, softcap: float = 0.0) -> Array:
+    """GQA scaled-dot-product attention.
+
+    q: (B,S,Hq,D)  k/v: (B,T,Hkv,D)  mask: (B,S,T) or (1,S,T) bool.
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    q = q.reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, Hq, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def sdpa_blockwise(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    k_pos: Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> Array:
+    """Memory-efficient causal attention (flash-style at the XLA level).
+
+    Double-chunked online softmax: scans query chunks (outer ``lax.map``)
+    and kv chunks (inner ``lax.scan`` carrying running max/sum/acc), so the
+    live logits buffer is (B, Hkv, G, q_chunk, k_chunk) instead of the
+    quadratic (…, S, S). This is the §Perf optimization that removes the
+    memory-roofline blowup of naive attention at 32 k context (the Pallas
+    ``flash_prefill`` kernel is the TPU-native version of the same tiling;
+    this lowering keeps the dry-run pure-XLA).
+    """
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qc = min(q_chunk, S)
+    kc = min(k_chunk, T)
+    # pad S/T to chunk multiples (masked out via positions)
+    pad_s = (-S) % qc
+    pad_t = (-T) % kc
+    qg = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0))).reshape(
+        B, (S + pad_s) // qc, qc, Hkv, G, D
+    )
+    qp = jnp.pad(q_pos, ((0, 0), (0, pad_s)), constant_values=-1).reshape(
+        B, (S + pad_s) // qc, qc
+    )
+    kk = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0))).reshape(
+        B, (T + pad_t) // kc, kc, Hkv, D
+    )
+    vv = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0))).reshape(
+        B, (T + pad_t) // kc, kc, Hkv, D
+    )
+    kp = jnp.pad(k_pos, ((0, 0), (0, pad_t)), constant_values=2**30).reshape(
+        B, (T + pad_t) // kc, kc
+    )
+
+    def one_q_chunk(args):
+        qb, qpb = args  # (B, qc, Hkv, G, D), (B, qc)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kpb = inp  # (B, kc, Hkv, D), (B, kc)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+            if softcap > 0:
+                s = jnp.tanh(s / softcap) * softcap
+            mask = kpb[:, None, None, None, :] <= qpb[:, None, None, :, None]
+            if window > 0:
+                mask = jnp.logical_and(
+                    mask,
+                    kpb[:, None, None, None, :]
+                    > qpb[:, None, None, :, None] - window,
+                )
+            mask = jnp.logical_and(mask, kpb[:, None, None, None, :] >= 0)
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p_ = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p_, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p_, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kk, 1, 0), jnp.moveaxis(vv, 1, 0),
+             jnp.moveaxis(kp, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,qc,D)
+        return jnp.moveaxis(out, 3, 1)  # (B,qc,Hkv,G,D)
+
+    # checkpoint per q-chunk: without it AD saves every kv-step's chunk
+    # logits and the backward materializes the full (S,S) again — the whole
+    # point of blockwise attention is to recompute them chunkwise instead.
+    outs = jax.lax.map(jax.checkpoint(one_q_chunk),
+                       (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S + pad_s, Hq, D)[:, :S]
+    return out.astype(q.dtype)
+
+
+def gqa_full(
+    p: dict,
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    *,
+    lora=None,
+    adapter_ids=None,
+    lora_scale: float = 1.0,
+    window: int = 0,
+    mrope_positions=None,
+    q_chunk: int = 0,
+) -> tuple[Array, tuple[Array, Array]]:
+    """Full-sequence causal attention (train / fresh prefill).
+
+    ``q_chunk > 0`` switches to the blockwise (memory-efficient) path.
+    Returns (out, (k, v)) so callers can seed a decode cache.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions, lora, adapter_ids, lora_scale,
+                   mrope_positions)
+    if q_chunk > 0:
+        out = sdpa_blockwise(q, k, v, positions, positions, window=window,
+                             softcap=cfg.logit_softcap, q_chunk=q_chunk,
+                             k_chunk=q_chunk)
+    else:
+        if window > 0:
+            mask = window_mask(positions, positions, window)
+        else:
+            mask = causal_mask(positions, positions)
+        out = sdpa(q, k, v, mask, cfg.logit_softcap)
+    out = out.reshape(B, S, -1)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    return out, (k, v)
+
+
+def quantize_kv_rows(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) symmetric int8 quantization of K/V rows."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def gqa_cached(
+    p: dict,
+    x: Array,
+    start: Array,  # (B,) absolute position of x[:, 0]
+    cache_k: Array,  # (B, T, Hkv, D) — bf16/f32, or int8 when quantized
+    cache_v: Array,
+    cfg: ModelConfig,
+    *,
+    lora=None,
+    adapter_ids=None,
+    lora_scale: float = 1.0,
+    window: int = 0,
+    mrope_positions=None,
+    cache_k_scale: Array | None = None,  # (B, T, Hkv) — int8-KV mode
+    cache_v_scale: Array | None = None,
+) -> tuple[Array, tuple]:
+    """Suffix attention against a KV cache (decode S=1, or chunked prefill).
+
+    Writes the new K/V at rows ``start..start+S`` (ring-indexed when
+    ``window>0`` and T == window) and attends over the whole cache with a
+    position-validity mask. With scale arrays present the cache is int8
+    (§Perf: halves the decode memory-roofline vs bf16; dequant fuses into
+    the attention dot so HBM traffic is the int8 payload).
+    Returns (out, updated cache arrays — (k, v) or (k, v, ks, vs)).
+    """
+    B, S, _ = x.shape
+    T = cache_k.shape[1]
+    quant = cache_k_scale is not None
+    positions = start[:, None] + jnp.arange(S)[None, :]  # (B,S)
+    q, k, v = _qkv(p, x, cfg, positions, lora, adapter_ids, lora_scale,
+                   mrope_positions)
+    if window > 0 and T == window:
+        slots = positions % window
+    else:
+        slots = positions
+    # scatter the new rows into the cache (per batch row)
+    def write(c, new, slot):
+        return c.at[slot].set(new)
+
+    if quant:
+        kq, ks = quantize_kv_rows(k)
+        vq, vs = quantize_kv_rows(v)
+        cache_k = jax.vmap(write)(cache_k, kq, slots)
+        cache_v = jax.vmap(write)(cache_v, vq, slots)
+        cache_k_scale = jax.vmap(write)(cache_k_scale, ks, slots)
+        cache_v_scale = jax.vmap(write)(cache_v_scale, vs, slots)
+        k_eff = cache_k.astype(x.dtype) * cache_k_scale[..., None].astype(x.dtype)
+        v_eff = cache_v.astype(x.dtype) * cache_v_scale[..., None].astype(x.dtype)
+    else:
+        cache_k = jax.vmap(write)(cache_k, k, slots)
+        cache_v = jax.vmap(write)(cache_v, v, slots)
+        k_eff, v_eff = cache_k, cache_v
+    # absolute position of every cache slot, for masking
+    if window > 0 and T == window:
+        # slot j holds absolute position: largest p <= last with p % W == j
+        last = positions[:, -1:]  # (B,1)
+        j = jnp.arange(T)[None, :]
+        kpos = last - ((last - j) % window)
+    else:
+        kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    valid = jnp.logical_and(kpos <= positions[:, -1:], kpos >= 0)
+    if window > 0:
+        mask = window_mask(positions, kpos, window)
+        mask = jnp.logical_and(mask, valid[:, None, :])
+    else:
+        mask = causal_mask(positions, kpos, valid)
+    out = sdpa(q, k_eff, v_eff, mask, cfg.logit_softcap)
+    out = out.reshape(B, S, -1)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    if quant:
+        return out, (cache_k, cache_v, cache_k_scale, cache_v_scale)
+    return out, (cache_k, cache_v)
+
+
+# ====================================================================== MLA
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    assert m is not None
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype),
+        "w_kv_a": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": init_rms(m.kv_lora_rank, dtype),
+        "w_kv_b": dense_init(
+            ks[2], m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim), dtype
+        ),
+        "wo": dense_init(ks[3], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(p, x, cfg, positions, lora, adapter_ids, lora_scale):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = _proj(x, p["wq"], lora, "q", adapter_ids, lora_scale)
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions, lora, adapter_ids, lora_scale):
+    m = cfg.mla
+    ckv = _proj(x, p["w_kv_a"], lora, "kv_a", adapter_ids, lora_scale)
+    latent, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return latent, k_rope
+
+
+def mla_full(
+    p: dict,
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    *,
+    lora=None,
+    adapter_ids=None,
+    lora_scale: float = 1.0,
+    **_: object,
+) -> tuple[Array, tuple[Array, Array]]:
+    """Full-seq MLA (naive expanded form). Cache is (latent, k_rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, positions, lora, adapter_ids, lora_scale)
+    latent, k_rope = _mla_latent(p, x, cfg, positions, lora, adapter_ids, lora_scale)
+    kv = latent @ p["w_kv_b"]
+    kv = kv.reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = causal_mask(positions, positions)
+    out = sdpa(q, k, v, mask)
+    out = out.reshape(B, S, -1)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    return out, (latent, k_rope)
+
+
+def mla_cached(
+    p: dict,
+    x: Array,
+    start: Array,
+    cache_latent: Array,  # (B, T, kv_lora)
+    cache_krope: Array,  # (B, T, rope_dim)
+    cfg: ModelConfig,
+    *,
+    lora=None,
+    adapter_ids=None,
+    lora_scale: float = 1.0,
+    **_: object,
+) -> tuple[Array, tuple[Array, Array]]:
+    """Cached MLA decode in the ABSORBED form.
+
+    The up-projection ``w_kv_b`` is folded into the query/output sides so the
+    per-step cost is O(S · kv_lora) instead of O(S · H · head_dim) — the
+    compressed latent is attended directly (DeepSeek-V2 §"matrix absorption").
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    T = cache_latent.shape[1]
+    positions = start[:, None] + jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions, lora, adapter_ids, lora_scale)
+    latent_new, krope_new = _mla_latent(
+        p, x, cfg, positions, lora, adapter_ids, lora_scale
+    )
+
+    def write(c, new, slot):
+        return c.at[slot].set(new)
+
+    cache_latent = jax.vmap(write)(cache_latent, latent_new, positions)
+    cache_krope = jax.vmap(write)(cache_krope, krope_new, positions)
+    w_b = p["w_kv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_bk = w_b[..., : m.qk_nope_head_dim]  # (kv_lora, H, nope)
+    w_bv = w_b[..., m.qk_nope_head_dim :]  # (kv_lora, H, v)
+    # absorb: q_eff (B,S,H,kv_lora)
+    q_eff = jnp.einsum("bshn,lhn->bshl", q_nope, w_bk)
+    scores = jnp.einsum("bshl,btl->bhst", q_eff, cache_latent)
+    scores = scores + jnp.einsum("bshr,btr->bhst", q_rope, cache_krope)
+    scores = scores.astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    )
+    kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    valid = kpos <= positions[:, -1:]
+    mask = causal_mask(positions, kpos, valid)  # (B,S,T)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btl->bshl", w, cache_latent)
+    out = jnp.einsum("bshl,lhv->bshv", ctx, w_bv)
+    out = out.reshape(B, S, -1)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    return out, (cache_latent, cache_krope)

@@ -1,0 +1,122 @@
+"""Shared neural building blocks (pure-functional JAX)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d: int, dtype=jnp.float32) -> Array:
+    return jnp.zeros((d,), dtype)  # (1 + scale) parametrization
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array, positions: Array, theta: float, sections: tuple[int, int, int]
+) -> Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, ..., seq) — temporal / height / width position ids. The
+    head_dim/2 frequency slots are partitioned into 3 sections; section ``i``
+    rotates by ``positions[i]``. With all three position streams equal this
+    reduces exactly to standard RoPE (text-only case).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    # build per-slot position selection
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # (hd/2,) in {0,1,2}
+    # positions: (3, B, S) -> select per slot: (B, S, hd/2)
+    pos = jnp.take(positions, sec, axis=0)  # (hd/2, B, S) after take on axis0
+    pos = jnp.moveaxis(pos, 0, -1)  # (B, S, hd/2)
+    angles = pos.astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- inits
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------- LoRA op
+def lora_delta(
+    x: Array,
+    lora_a: Array,
+    lora_b: Array,
+    adapter_ids: Array,
+    scale: float,
+) -> Array:
+    """Batched multi-LoRA application (SGMV semantics, jnp formulation).
+
+    x:           (B, S, d_in)
+    lora_a:      (n_slots, d_in, r)    stacked adapter A matrices
+    lora_b:      (n_slots, r, d_out)   stacked adapter B matrices
+    adapter_ids: (B,) int32            slot index per sequence
+    Returns      (B, S, d_out)         Δ = (x @ A_i) @ B_i · scale
+
+    This is the gather-einsum reference; ``repro.kernels.sgmv`` provides the
+    TPU Pallas kernel with identical semantics (tested against this).
+    """
+    a = jnp.take(lora_a, adapter_ids, axis=0)  # (B, d_in, r)
+    b = jnp.take(lora_b, adapter_ids, axis=0)  # (B, r, d_out)
+    h = jnp.einsum("bsd,bdr->bsr", x, a)
+    return jnp.einsum("bsr,bro->bso", h, b) * scale
+
+
+def causal_mask(q_pos: Array, k_pos: Array, k_valid: Array | None = None) -> Array:
+    """Boolean (..., q, k) mask: key visible iff k_pos <= q_pos (and valid)."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if k_valid is not None:
+        m = jnp.logical_and(m, k_valid[..., None, :])
+    return m
+
+
+def window_mask(q_pos: Array, k_pos: Array, window: int) -> Array:
+    m = causal_mask(q_pos, k_pos)
+    return jnp.logical_and(m, k_pos[..., None, :] > q_pos[..., :, None] - window)

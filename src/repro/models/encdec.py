@@ -1,0 +1,252 @@
+"""Encoder–decoder LM (seamless-m4t backbone).
+
+The modality frontend is a STUB per the assignment: ``encode`` consumes
+precomputed frame embeddings (B, S_src, d_model) instead of raw audio. The
+decoder is a standard causal transformer with cross-attention; its self-KV
+is cache-managed like any decoder-only arch, and the cross-KV is computed
+once per request at prefill (cacheable per encoder prefix).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import gqa_cached, gqa_full, init_gqa, sdpa
+from .common import dense_init, embed_init, init_rms, lora_delta, rms_norm
+from .ffn import dense_ffn, init_dense_ffn
+
+Array = jax.Array
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_cross(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+    }
+
+
+def _cross_kv(p, enc_out, cfg):
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, T, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _cross_attend(p, x, ck, cv, cfg):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    mask = jnp.ones((B, S, ck.shape[1]), bool)
+    out = sdpa(q, ck, cv, mask)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+@dataclasses.dataclass
+class EncDecLM:
+    cfg: ModelConfig
+    dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = False
+    unroll: bool = False  # dry-run: python loop instead of lax.scan
+
+    def _scan_layers(self, body, init, xs):
+        if not self.unroll:
+            return jax.lax.scan(body, init, xs)
+        length = len(jax.tree.leaves(xs)[0])
+        carry = init
+        outs = []
+        for i in range(length):
+            carry, out = body(carry, jax.tree.map(lambda a: a[i], xs))
+            outs.append(out)
+        if outs and outs[0] is not None:
+            stacked = jax.tree.map(lambda *o: jnp.stack(o), *outs)
+        else:
+            stacked = None
+        return carry, stacked
+
+    # ------------------------------------------------------------------ init
+    def init_params(self, key) -> dict:
+        cfg = self.cfg
+        n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+        keys = jax.random.split(key, n_enc + n_dec + 2)
+        enc_layers = []
+        for k in keys[:n_enc]:
+            k1, k2 = jax.random.split(k)
+            enc_layers.append({
+                "attn": init_gqa(k1, cfg, self.dtype),
+                "ffn": init_dense_ffn(k2, cfg.d_model, cfg.d_ff, self.dtype),
+                "norm1": init_rms(cfg.d_model, self.dtype),
+                "norm2": init_rms(cfg.d_model, self.dtype),
+            })
+        dec_layers = []
+        for k in keys[n_enc : n_enc + n_dec]:
+            k1, k2, k3 = jax.random.split(k, 3)
+            dec_layers.append({
+                "attn": init_gqa(k1, cfg, self.dtype),
+                "cross": _init_cross(k2, cfg, self.dtype),
+                "ffn": init_dense_ffn(k3, cfg.d_model, cfg.d_ff, self.dtype),
+                "norm1": init_rms(cfg.d_model, self.dtype),
+                "norm_c": init_rms(cfg.d_model, self.dtype),
+                "norm2": init_rms(cfg.d_model, self.dtype),
+            })
+        return {
+            "encoder": _stack(enc_layers),
+            "decoder": _stack(dec_layers),
+            "embed": embed_init(keys[-2], cfg.vocab_size, cfg.d_model, self.dtype),
+            "lm_head": dense_init(keys[-1], cfg.d_model, cfg.vocab_size, self.dtype),
+            "enc_norm": init_rms(cfg.d_model, self.dtype),
+            "final_norm": init_rms(cfg.d_model, self.dtype),
+        }
+
+    def lora_dims(self):
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        return {
+            "q": (d, cfg.num_heads * hd),
+            "k": (d, cfg.num_kv_heads * hd),
+            "v": (d, cfg.num_kv_heads * hd),
+            "o": (cfg.num_heads * hd, d),
+        }
+
+    def init_lora(self, key, n_slots: int) -> dict:
+        cfg = self.cfg
+        r = cfg.lora.rank
+        out = {}
+        for t, (din, dout) in self.lora_dims().items():
+            key, ka, kb = jax.random.split(key, 3)
+            a = (jax.random.normal(ka, (cfg.num_layers, n_slots, din, r), jnp.float32)
+                 * (1.0 / din ** 0.5)).astype(self.dtype)
+            b = jnp.zeros((cfg.num_layers, n_slots, r, dout), self.dtype)
+            out[t] = (a, b)
+        return out
+
+    @property
+    def lora_scale(self) -> float:
+        return self.cfg.lora.alpha / self.cfg.lora.rank
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames: Array) -> Array:
+        """frames: (B, S_src, d_model) precomputed frontend embeddings."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        x = frames.astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        def body(x, lp):
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            # bidirectional: full visibility mask
+            hd = cfg.resolved_head_dim
+            q = (h @ lp["attn"]["wq"]).reshape(B, S, cfg.num_heads, hd)
+            k = (h @ lp["attn"]["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+            v = (h @ lp["attn"]["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+            from .common import apply_rope
+
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            mask = jnp.ones((B, S, S), bool)
+            o = sdpa(q, k, v, mask).reshape(B, S, -1) @ lp["attn"]["wo"]
+            x = x + o
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            x = x + dense_ffn(lp["ffn"], h2, cfg.activation)
+            return x, None
+
+        x, _ = self._scan_layers(body, x, params["encoder"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ----------------------------------------------------------------- train
+    def forward(self, params, frames, tokens, *, lora=None, adapter_ids=None):
+        """Teacher-forcing decode over the full target sequence."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        lora = lora or {}
+
+        def body(x, xs):
+            lp, lsl = xs
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            mixed, _ = gqa_full(lp["attn"], h, positions, cfg, lora=lsl,
+                                adapter_ids=adapter_ids, lora_scale=self.lora_scale)
+            x = x + mixed
+            hc = rms_norm(x, lp["norm_c"], cfg.norm_eps)
+            ck, cv = _cross_kv(lp["cross"], enc_out, cfg)
+            x = x + _cross_attend(lp["cross"], hc, ck, cv, cfg)
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            x = x + dense_ffn(lp["ffn"], h2, cfg.activation)
+            return x, None
+
+        x, _ = self._scan_layers(body, x, (params["decoder"], lora))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["lm_head"], jnp.float32(0.0)
+
+    # ---------------------------------------------------------------- caches
+    def init_cache(self, batch: int, max_len: int, src_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        L = cfg.num_layers
+        return {
+            "k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), self.dtype),
+            "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), self.dtype),
+            "ck": jnp.zeros((L, batch, src_len, cfg.num_kv_heads, hd), self.dtype),
+            "cv": jnp.zeros((L, batch, src_len, cfg.num_kv_heads, hd), self.dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, frames, tokens, max_len: int, *, lora=None,
+                adapter_ids=None):
+        """Encode + seed cross-KV + decode-prefill the target prefix."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        cache = self.init_cache(B, max_len, enc_out.shape[1])
+
+        def seed(lp):
+            return _cross_kv(lp["cross"], enc_out, cfg)
+
+        ck, cv = jax.vmap(seed)(params["decoder"])  # (L,B,T,H,D)
+        cache["ck"], cache["cv"] = ck, cv
+        return self.extend(params, cache, tokens, jnp.zeros((B,), jnp.int32),
+                           lora=lora, adapter_ids=adapter_ids)
+
+    def extend(self, params, cache, tokens, start, *, lora=None, adapter_ids=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        lora = lora or {}
+        clen = cache.pop("len")
+
+        def body(x, xs):
+            lp, lsl, lc = xs
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            mixed, (ck_new, cv_new) = gqa_cached(
+                lp["attn"], h, start, lc["k"], lc["v"], cfg, lora=lsl,
+                adapter_ids=adapter_ids, lora_scale=self.lora_scale)
+            x = x + mixed
+            hc = rms_norm(x, lp["norm_c"], cfg.norm_eps)
+            x = x + _cross_attend(lp["cross"], hc, lc["ck"], lc["cv"], cfg)
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            x = x + dense_ffn(lp["ffn"], h2, cfg.activation)
+            return x, {"k": ck_new, "v": cv_new, "ck": lc["ck"], "cv": lc["cv"]}
+
+        x, new_cache = self._scan_layers(body, x, (params["decoder"], lora, cache))
+        cache["len"] = clen
+        new_cache["len"] = start + S
+        x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+        return x @ params["lm_head"], new_cache
+
+    def decode(self, params, cache, tokens, *, lora=None, adapter_ids=None):
+        return self.extend(params, cache, tokens, cache["len"], lora=lora,
+                           adapter_ids=adapter_ids)

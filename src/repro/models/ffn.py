@@ -1,0 +1,95 @@
+"""Feed-forward variants: gated dense (SwiGLU/GeGLU) and capacity-based MoE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from .common import activation, dense_init
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- dense
+def init_dense_ffn(key, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d, dtype),
+    }
+
+
+def dense_ffn(p: dict, x: Array, act_name: str) -> Array:
+    act = activation(act_name)
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# --------------------------------------------------------------------- MoE
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    assert m is not None
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": dense_init(ks[1], d, ff, dtype)[None].repeat(E, 0),
+        "w_up": dense_init(ks[2], d, ff, dtype)[None].repeat(E, 0),
+        "w_down": dense_init(ks[3], ff, d, dtype)[None].repeat(E, 0),
+    }
+    if m.num_shared:
+        p["shared"] = init_dense_ffn(ks[4], d, ff * m.num_shared, dtype)
+    return p
+
+
+def moe_ffn(
+    p: dict, x: Array, cfg: ModelConfig, *, capacity: int | None = None
+) -> tuple[Array, Array]:
+    """Capacity-based top-k MoE (GShard/Switch-style dropping dispatch).
+
+    Scatter-based dispatch avoids the (T, E, C) one-hot intermediate: each
+    (token, k) pair computes its (expert, slot) destination and scatter-adds
+    into the (E, C, d) buffer — memory is O(E·C·d) = O(T·k·cf·d), FLOPs are
+    ~cf × the ideal active-expert FLOPs. Returns (out, aux_loss).
+    """
+    m = cfg.moe
+    act = activation(cfg.activation)
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    E = m.num_experts
+    C = capacity or max(1, int(T * m.top_k * m.capacity_factor / E))
+    # position of each (token,k) inside its expert queue
+    flat_e = expert_ids.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot  # running count per expert
+    slot = jnp.sum(pos_in_e, axis=-1) - 1  # (T*k,)
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+    # dispatch: (E, C, d)
+    disp = jnp.zeros((E, C, d), x.dtype)
+    contrib = jnp.where(keep[:, None], xt[tok_idx], 0)
+    disp = disp.at[flat_e, slot].add(contrib)
+    # expert computation, batched over E
+    h = act(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", disp, p["w_up"])
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, d)
+    # combine: gather each (token,k) result and weight by its gate
+    gathered = eout[flat_e, slot]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[tok_idx].add(gathered * w)
+    # shared experts (DeepSeek-style) always-on
+    if "shared" in p:
+        out = out + dense_ffn(p["shared"], xt, cfg.activation)
+    # load-balancing aux loss (Switch):  E * Σ_e f_e · p_e
+    density = jnp.mean(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_prob)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,160 @@
+"""Model facade: build any assigned architecture and derive its step
+functions (train / prefill / decode) — the objects the launcher lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..optim import OptState, adamw_init, adamw_update, clip_by_global_norm
+from .encdec import EncDecLM
+from .transformer import LM
+
+Array = jax.Array
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = False,
+                unroll: bool = False, q_chunk: int = 0,
+                remat_policy: str = "full", kv_quant: bool = False):
+    if cfg.is_encdec:
+        return EncDecLM(cfg, dtype, remat, unroll)
+    return LM(cfg, dtype, remat, unroll, q_chunk, remat_policy,
+              kv_quant=bool(kv_quant))
+
+
+def cross_entropy(logits: Array, labels: Array, ignore: int = -1) -> Array:
+    """Mean CE over valid positions; labels==ignore are masked.
+
+    Written as logsumexp − one-hot contraction (no take_along_axis): a
+    vocab-dim gather would force GSPMD to all-gather the (B,S,V) logits,
+    while elementwise + reductions keep the vocab shard local (the unembed
+    matmul shards V over 'model').
+    """
+    valid = labels != ignore
+    safe = jnp.where(valid, labels, 0)
+    x = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(safe, x.shape[-1], dtype=x.dtype)
+    ll = jnp.sum(x * onehot, axis=-1)
+    nll = lse - ll
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / jnp.maximum(1, jnp.sum(valid))
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    lora: Any
+    opt: OptState
+    step: Array
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "lora", "opt", "step"], meta_fields=[]
+)
+
+
+def make_train_step(
+    model,
+    *,
+    lr: float = 3e-4,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    moe_aux_weight: float = 0.01,
+    train_lora_only: bool = False,
+) -> Callable:
+    """Builds the jit-able train step for any architecture.
+
+    batch: {"tokens": (B,S) int32, "labels": (B,S) int32,
+            "adapter_ids": (B,) int32, optional "frames"/"extra_embeds"}.
+    """
+    cfg = model.cfg
+
+    def loss_fn(trainable, frozen, batch):
+        params = frozen if train_lora_only else trainable["params"]
+        lora = trainable.get("lora")
+        if cfg.is_encdec:
+            logits, aux = model.forward(params, batch["frames"], batch["tokens"],
+                                        lora=lora, adapter_ids=batch.get("adapter_ids"))
+        else:
+            logits, aux = model.forward(
+                params, batch["tokens"], lora=lora,
+                adapter_ids=batch.get("adapter_ids"),
+                extra_embeds=batch.get("extra_embeds"),
+                mrope_positions=batch.get("mrope_positions"),
+            )
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + moe_aux_weight * aux, loss
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if train_lora_only:
+            trainable = {"lora": state.lora}
+            frozen = state.params
+        else:
+            trainable = {"params": state.params, "lora": state.lora}
+            frozen = None
+        (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainable, frozen, batch
+        )
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_trainable, new_opt = adamw_update(
+            grads, state.opt, trainable, lr, weight_decay=weight_decay
+        )
+        new_state = TrainState(
+            params=new_trainable.get("params", state.params),
+            lora=new_trainable.get("lora", state.lora),
+            opt=new_opt,
+            step=state.step + 1,
+        )
+        return new_state, {"loss": ce, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_train_state(model, key, n_lora_slots: int = 0,
+                     train_lora_only: bool = False) -> TrainState:
+    k1, k2 = jax.random.split(key)
+    params = model.init_params(k1)
+    lora = model.init_lora(k2, n_lora_slots) if n_lora_slots else None
+    if train_lora_only:
+        opt = adamw_init({"lora": lora})
+    else:
+        opt = adamw_init({"params": params, "lora": lora})
+    return TrainState(params=params, lora=lora, opt=opt,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_prefill_step(model) -> Callable:
+    cfg = model.cfg
+
+    if cfg.is_encdec:
+        def prefill_step(params, lora, batch):
+            return model.prefill(params, batch["frames"], batch["tokens"],
+                                 max_len=batch["tokens"].shape[1],
+                                 lora=lora, adapter_ids=batch.get("adapter_ids"))
+    else:
+        def prefill_step(params, lora, batch):
+            return model.prefill(params, batch["tokens"],
+                                 max_len=batch["tokens"].shape[1], lora=lora,
+                                 adapter_ids=batch.get("adapter_ids"),
+                                 extra_embeds=batch.get("extra_embeds"),
+                                 mrope_positions=batch.get("mrope_positions"))
+
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    """serve_step: one new token against a seq_len KV cache."""
+
+    def decode_step(params, lora, cache, batch):
+        logits, cache = model.decode(params, cache, batch["tokens"], lora=lora,
+                                     adapter_ids=batch.get("adapter_ids"))
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step

@@ -1,0 +1,197 @@
+"""Recurrent mixers: RWKV-6 (Finch) time/channel mix and Griffin RG-LRU.
+
+Both are *state-based* (O(1) per decode step, sub-quadratic prefill), which
+is what makes their architectures eligible for the ``long_500k`` shape. For
+FASTLIBRA these states are the "KV cache" analogue: a per-prefix state
+snapshot is cached by the dependency tree (see ``repro/kvcache/state_cache``).
+
+Simplifications vs. the reference implementations (recorded in DESIGN.md):
+RWKV-6 uses the data-dependent decay LoRA (the Finch hallmark) but a static
+token-shift lerp for r/k/v/g (full ddlerp omitted); Griffin's RG-LRU follows
+the paper's equations with full dense input/recurrence gates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import activation, dense_init, lora_delta, rms_norm
+
+Array = jax.Array
+
+
+def _proj(x, w, lora, name, adapter_ids, scale):
+    y = x @ w
+    if lora is not None and name in lora and adapter_ids is not None:
+        a, b = lora[name]
+        y = y + lora_delta(x, a, b, adapter_ids, scale)
+    return y
+
+
+# ================================================================== RWKV-6
+def init_rwkv_layer(key, cfg: ModelConfig, dtype) -> dict:
+    r = cfg.rwkv
+    assert r is not None
+    d = cfg.d_model
+    H, N = d // r.head_dim, r.head_dim
+    ks = jax.random.split(key, 10)
+    lerp = lambda k: (jax.random.uniform(k, (d,), jnp.float32) * 0.5).astype(dtype)
+    return {
+        # time mix
+        "mu_r": lerp(ks[0]), "mu_k": lerp(ks[1]), "mu_v": lerp(ks[2]),
+        "mu_g": lerp(ks[3]), "mu_w": lerp(ks[4]),
+        "w0": jnp.full((d,), -6.0, dtype),  # base decay (≈ slow)
+        "wa": dense_init(ks[5], d, r.decay_rank, dtype),
+        "wb": dense_init(ks[6], r.decay_rank, d, dtype),
+        "u": jnp.zeros((H, N), dtype),
+        "wr": dense_init(ks[7], d, d, dtype),
+        "wk": dense_init(ks[8], d, d, dtype),
+        "wv": dense_init(ks[9], d, d, dtype),
+        "wg": dense_init(jax.random.fold_in(key, 10), d, d, dtype),
+        "wo": dense_init(jax.random.fold_in(key, 11), d, d, dtype),
+        "ln_x": jnp.zeros((d,), dtype),
+        # channel mix
+        "mu_ck": lerp(jax.random.fold_in(key, 12)),
+        "mu_cr": lerp(jax.random.fold_in(key, 13)),
+        "w_ck": dense_init(jax.random.fold_in(key, 14), d, cfg.d_ff, dtype),
+        "w_cv": dense_init(jax.random.fold_in(key, 15), cfg.d_ff, d, dtype),
+        "w_cr": dense_init(jax.random.fold_in(key, 16), d, d, dtype),
+    }
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    H, N = d // r.head_dim, r.head_dim
+    return {
+        "tm_x": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, N, N), jnp.float32),
+        "cm_x": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv_time_mix(p, x, state, cfg, lora, adapter_ids, lora_scale):
+    r = cfg.rwkv
+    B, S, d = x.shape
+    H, N = d // r.head_dim, r.head_dim
+    xprev = jnp.concatenate([state["tm_x"][:, None, :], x[:, :-1, :]], axis=1)
+    mix = lambda mu: x + (xprev - x) * mu
+    rr = _proj(mix(p["mu_r"]), p["wr"], lora, "r", adapter_ids, lora_scale)
+    kk = _proj(mix(p["mu_k"]), p["wk"], lora, "k", adapter_ids, lora_scale)
+    vv = _proj(mix(p["mu_v"]), p["wv"], lora, "v", adapter_ids, lora_scale)
+    gg = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    # data-dependent decay (Finch): w_t = exp(-exp(w0 + lora_w(x_w)))
+    xw = mix(p["mu_w"])
+    w_log = p["w0"].astype(jnp.float32) + ((xw @ p["wa"]) @ p["wb"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))  # (B,S,d) in (0,1)
+    rr = rr.reshape(B, S, H, N).astype(jnp.float32)
+    kk = kk.reshape(B, S, H, N).astype(jnp.float32)
+    vv = vv.reshape(B, S, H, N).astype(jnp.float32)
+    w = w.reshape(B, S, H, N)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S_state, inputs):
+        r_t, k_t, v_t, w_t = inputs  # each (B,H,N) / decay (B,H,N)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, S_state + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S_state + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rr, kk, vv, w))  # (S,B,H,N)
+    S_final, ys = jax.lax.scan(step, state["wkv"], xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)  # (B,S,d)
+    # per-head group norm
+    y = y.reshape(B, S, H, N)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + 1e-5)
+    y = y.reshape(B, S, d) * (1.0 + p["ln_x"].astype(jnp.float32))
+    y = (y * gg.astype(jnp.float32)).astype(x.dtype)
+    out = _proj(y, p["wo"], lora, "o", adapter_ids, lora_scale)
+    new_state = {"tm_x": x[:, -1, :], "wkv": S_final, "cm_x": state["cm_x"]}
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, state, cfg):
+    xprev = jnp.concatenate([state["cm_x"][:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (xprev - x) * p["mu_ck"]
+    xr = x + (xprev - x) * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    out = jax.nn.sigmoid(xr @ p["w_cr"]) * (k @ p["w_cv"])
+    new_state = dict(state)
+    new_state["cm_x"] = x[:, -1, :]
+    return out, new_state
+
+
+# ================================================================== RG-LRU
+def init_rglru_layer(key, cfg: ModelConfig, dtype) -> dict:
+    g = cfg.rglru
+    assert g is not None
+    d = cfg.d_model
+    w = g.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, w, dtype),
+        "w_gel": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (g.conv_width, w), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], w, w, dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ks[4], w, w, dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "lam": jnp.linspace(2.0, 5.0, w).astype(dtype),  # Λ: a = σ(Λ) near 1
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, g.conv_width - 1, w), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: Array, w: Array, b: Array, carry: Array):
+    """x: (B,S,W); w: (cw,W) depthwise; carry: (B,cw-1,W) previous inputs."""
+    cw = w.shape[0]
+    xx = jnp.concatenate([carry, x], axis=1)  # (B, S+cw-1, W)
+    out = sum(xx[:, i : i + x.shape[1], :] * w[i] for i in range(cw)) + b
+    new_carry = xx[:, -(cw - 1) :, :] if cw > 1 else carry
+    return out, new_carry
+
+
+def rglru_block(p, x, state, cfg: ModelConfig):
+    """Griffin recurrent block: (gelu gate) ⊙ RG-LRU(conv1d(W_in x)) → W_out.
+
+    Uses an associative scan over time (parallel prefill) for the linear
+    recurrence h_t = a_t ⊙ h_{t-1} + b_t.
+    """
+    g = cfg.rglru
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(x @ p["w_gel"])
+    u = x @ p["w_in"]
+    u, conv_carry = _causal_depthwise_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    log_a_base = -jax.nn.softplus(-p["lam"].astype(jnp.float32))  # log σ(Λ) < 0
+    log_a = g.c_exponent * r * log_a_base  # (B,S,W)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * (
+        i * u.astype(jnp.float32)
+    )
+    # prepend carried state as a pseudo-step: h_0 via (a=1 on carry trick)
+    a_all = jnp.concatenate([jnp.ones((B, 1, a.shape[-1]), a.dtype), a], axis=1)
+    b_all = jnp.concatenate([state["h"][:, None, :], b], axis=1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h_all = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    h = h_all[:, 1:, :]  # (B,S,W)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = {"h": h_all[:, -1, :], "conv": conv_carry}
+    return y, new_state

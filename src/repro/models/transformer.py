@@ -1,0 +1,503 @@
+"""Composable decoder-only LM covering the dense / MoE / MLA / SSM / hybrid
+/ VLM families. One code path, mixer and FFN chosen by config; homogeneous
+stacks run under ``lax.scan`` (small HLO, fast multi-pod compiles), the
+hybrid (RecurrentGemma) pattern unrolls a python loop over grouped stacks.
+
+Public surface (all pure functions of params):
+  init_params(key)                         -> params pytree
+  init_lora(key, n_slots)                  -> stacked multi-LoRA params
+  init_cache(batch, max_len)               -> decode cache pytree
+  forward(params, tokens, ...)             -> (logits, aux)       train path
+  prefill(params, tokens, max_len, ...)    -> (logits, cache)     fresh prefill
+  extend(params, cache, tokens, start,...) -> (logits, cache)     chunked prefill
+  decode(params, cache, tokens, ...)       -> (logits, cache)     1-token step
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import gqa_cached, gqa_full, init_gqa, init_mla, mla_cached, mla_full
+from .common import dense_init, embed_init, init_rms, rms_norm
+from .ffn import dense_ffn, init_dense_ffn, init_moe, moe_ffn
+from .recurrent import (
+    init_rglru_layer,
+    init_rwkv_layer,
+    rglru_block,
+    rglru_state_init,
+    rwkv_channel_mix,
+    rwkv_state_init,
+    rwkv_time_mix,
+)
+
+Array = jax.Array
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = False
+    # unroll=True replaces lax.scan over layers with a python loop. Needed by
+    # the dry-run: XLA's cost_analysis counts a scan body ONCE (not × trip
+    # count), so rooflines must be derived from the unrolled HLO.
+    unroll: bool = False
+    # §Perf knobs: q_chunk>0 enables blockwise (memory-efficient) attention;
+    # remat_policy "dots" saves matmul outputs (recompute only cheap ops).
+    q_chunk: int = 0
+    remat_policy: str = "full"
+    kv_quant: bool = False  # int8 KV cache (decode memory-roofline, §Perf)
+
+    def _scan_layers(self, body, init, xs):
+        if not self.unroll:
+            return jax.lax.scan(body, init, xs)
+        length = len(jax.tree.leaves(xs)[0]) if jax.tree.leaves(xs) else self.cfg.num_layers
+        carry = init
+        outs = []
+        for i in range(length):
+            carry, out = body(carry, _index(xs, i))
+            outs.append(out)
+        if outs and outs[0] is not None:
+            stacked = jax.tree.map(lambda *o: jnp.stack(o), *outs)
+        else:
+            stacked = None
+        return carry, stacked
+
+    # ------------------------------------------------------------------ init
+    def init_params(self, key) -> dict:
+        cfg = self.cfg
+        kemb, khead, *kl = jax.random.split(key, 2 + cfg.num_layers)
+        params: dict = {
+            "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, self.dtype),
+            "final_norm": init_rms(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(khead, cfg.d_model, cfg.vocab_size, self.dtype)
+        if cfg.rglru is not None:
+            params.update(self._init_hybrid_layers(kl))
+        else:
+            params["layers"] = _stack([self._init_layer(k) for k in kl])
+        return params
+
+    def _init_layer(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"norm1": init_rms(cfg.d_model, self.dtype),
+             "norm2": init_rms(cfg.d_model, self.dtype)}
+        if cfg.rwkv is not None:
+            p["mixer"] = init_rwkv_layer(k1, cfg, self.dtype)
+            return p  # rwkv carries its own channel-mix (no separate ffn)
+        if cfg.mla is not None:
+            p["mixer"] = init_mla(k1, cfg, self.dtype)
+        else:
+            p["mixer"] = init_gqa(k1, cfg, self.dtype)
+        if cfg.moe is not None:
+            p["ffn"] = init_moe(k2, cfg, self.dtype)
+        else:
+            p["ffn"] = init_dense_ffn(k2, cfg.d_model, cfg.d_ff, self.dtype)
+        return p
+
+    def _layer_types(self) -> list[str]:
+        cfg = self.cfg
+        pat = cfg.rglru.block_pattern
+        return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+    def _init_hybrid_layers(self, keys) -> dict:
+        cfg = self.cfg
+        types = self._layer_types()
+        rec, attn, ffn, norms = [], [], [], []
+        for t, k in zip(types, keys):
+            k1, k2, k3 = jax.random.split(k, 3)
+            if t == "rec":
+                rec.append(init_rglru_layer(k1, cfg, self.dtype))
+            else:
+                attn.append(init_gqa(k1, cfg, self.dtype))
+            ffn.append(init_dense_ffn(k2, cfg.d_model, cfg.d_ff, self.dtype))
+            norms.append({"norm1": init_rms(cfg.d_model, self.dtype),
+                          "norm2": init_rms(cfg.d_model, self.dtype)})
+        return {
+            "rec_layers": _stack(rec),
+            "attn_layers": _stack(attn),
+            "ffn_layers": _stack(ffn),
+            "norms": _stack(norms),
+        }
+
+    # ------------------------------------------------------------------ LoRA
+    def lora_dims(self) -> dict[str, tuple[int, int]]:
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        if cfg.rwkv is not None:
+            dims = {"r": (d, d), "k": (d, d), "v": (d, d), "o": (d, d)}
+        elif cfg.mla is not None:
+            m = cfg.mla
+            dims = {
+                "q": (d, cfg.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+                "kv_a": (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                "o": (cfg.num_heads * m.v_head_dim, d),
+            }
+        else:
+            dims = {
+                "q": (d, cfg.num_heads * hd),
+                "k": (d, cfg.num_kv_heads * hd),
+                "v": (d, cfg.num_kv_heads * hd),
+                "o": (cfg.num_heads * hd, d),
+            }
+        return {t: dims[t] for t in cfg.lora.targets if t in dims}
+
+    def init_lora(self, key, n_slots: int) -> dict:
+        """Stacked multi-LoRA params: {target: (A:(L,slots,din,r), B:(L,slots,r,dout))}."""
+        cfg = self.cfg
+        r = cfg.lora.rank
+        out = {}
+        for t, (din, dout) in self.lora_dims().items():
+            key, ka, kb = jax.random.split(key, 3)
+            a = (jax.random.normal(ka, (cfg.num_layers, n_slots, din, r), jnp.float32)
+                 * (1.0 / din ** 0.5)).astype(self.dtype)
+            b = jnp.zeros((cfg.num_layers, n_slots, r, dout), self.dtype)
+            out[t] = (a, b)
+        return out
+
+    @property
+    def lora_scale(self) -> float:
+        return self.cfg.lora.alpha / self.cfg.lora.rank
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        L = cfg.num_layers
+        if cfg.rwkv is not None:
+            st = rwkv_state_init(cfg, batch, self.dtype)
+            cache = {k: jnp.stack([v] * L) for k, v in st.items()}
+        elif cfg.rglru is not None:
+            types = self._layer_types()
+            n_rec = types.count("rec")
+            n_attn = types.count("attn")
+            rst = rglru_state_init(cfg, batch, self.dtype)
+            W = min(max_len, cfg.window_size or max_len)
+            hd = cfg.resolved_head_dim
+            cache = {
+                "h": jnp.stack([rst["h"]] * n_rec),
+                "conv": jnp.stack([rst["conv"]] * n_rec),
+                "k": jnp.zeros((n_attn, batch, W, cfg.num_kv_heads, hd), self.dtype),
+                "v": jnp.zeros((n_attn, batch, W, cfg.num_kv_heads, hd), self.dtype),
+            }
+        elif cfg.mla is not None:
+            m = cfg.mla
+            cache = {
+                "latent": jnp.zeros((L, batch, max_len, m.kv_lora_rank), self.dtype),
+                "krope": jnp.zeros((L, batch, max_len, m.qk_rope_head_dim), self.dtype),
+            }
+        else:
+            hd = cfg.resolved_head_dim
+            kv_dtype = jnp.int8 if self.kv_quant else self.dtype
+            cache = {
+                "k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), kv_dtype),
+                "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, hd), kv_dtype),
+            }
+            if self.kv_quant:
+                cache["k_scale"] = jnp.zeros(
+                    (L, batch, max_len, cfg.num_kv_heads), jnp.float32)
+                cache["v_scale"] = jnp.zeros(
+                    (L, batch, max_len, cfg.num_kv_heads), jnp.float32)
+        cache["len"] = jnp.zeros((batch,), jnp.int32)
+        return cache
+
+    # ------------------------------------------------------------ embeddings
+    def _embed(self, params, tokens, extra_embeds=None):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        if extra_embeds is not None:
+            x = x + extra_embeds.astype(self.dtype)  # modality-frontend stub
+        return x
+
+    def _unembed(self, params, x):
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            return x @ params["embed"].T
+        return x @ params["lm_head"]
+
+    # ---------------------------------------------------------- layer bodies
+    def _layer_full(self, lp, lora_slice, x, positions, adapter_ids,
+                    mrope_positions, kv_out: bool):
+        """One layer, full-sequence (train / fresh prefill)."""
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if cfg.rwkv is not None:
+            st = rwkv_state_init(cfg, x.shape[0], self.dtype)
+            mixed, st = rwkv_time_mix(lp["mixer"], h, st, cfg, lora_slice,
+                                      adapter_ids, self.lora_scale)
+            x = x + mixed
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            out, st = rwkv_channel_mix(lp["mixer"], h2, st, cfg)
+            x = x + out
+            return x, aux, (st if kv_out else None)
+        if cfg.mla is not None:
+            mixed, kv = mla_full(lp["mixer"], h, positions, cfg, lora=lora_slice,
+                                 adapter_ids=adapter_ids, lora_scale=self.lora_scale)
+        else:
+            mixed, kv = gqa_full(lp["mixer"], h, positions, cfg, lora=lora_slice,
+                                 adapter_ids=adapter_ids, lora_scale=self.lora_scale,
+                                 window=self.cfg.window_size if self.cfg.rglru else 0,
+                                 mrope_positions=mrope_positions,
+                                 q_chunk=self.q_chunk)
+        x = x + mixed
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, aux = moe_ffn(lp["ffn"], h2, cfg)
+        else:
+            out = dense_ffn(lp["ffn"], h2, cfg.activation)
+        x = x + out
+        return x, aux, (kv if kv_out else None)
+
+    def _layer_cached(self, lp, lora_slice, lcache, x, start, adapter_ids,
+                      mrope_positions):
+        """One layer against a cache (decode / chunked prefill)."""
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if cfg.rwkv is not None:
+            st = {k: lcache[k] for k in ("tm_x", "wkv", "cm_x")}
+            mixed, st = rwkv_time_mix(lp["mixer"], h, st, cfg, lora_slice,
+                                      adapter_ids, self.lora_scale)
+            x = x + mixed
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            out, st = rwkv_channel_mix(lp["mixer"], h2, st, cfg)
+            x = x + out
+            return x, st
+        if cfg.mla is not None:
+            mixed, (cl, ck) = mla_cached(
+                lp["mixer"], h, start, lcache["latent"], lcache["krope"], cfg,
+                lora=lora_slice, adapter_ids=adapter_ids, lora_scale=self.lora_scale)
+            new_cache = {"latent": cl, "krope": ck}
+        else:
+            mixed, new_kv = gqa_cached(
+                lp["mixer"], h, start, lcache["k"], lcache["v"], cfg,
+                lora=lora_slice, adapter_ids=adapter_ids, lora_scale=self.lora_scale,
+                window=self.cfg.window_size if self.cfg.rglru else 0,
+                mrope_positions=mrope_positions,
+                cache_k_scale=lcache.get("k_scale"),
+                cache_v_scale=lcache.get("v_scale"))
+            if len(new_kv) == 4:
+                new_cache = {"k": new_kv[0], "v": new_kv[1],
+                             "k_scale": new_kv[2], "v_scale": new_kv[3]}
+            else:
+                new_cache = {"k": new_kv[0], "v": new_kv[1]}
+        x = x + mixed
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, _ = moe_ffn(lp["ffn"], h2, cfg)
+        else:
+            out = dense_ffn(lp["ffn"], h2, cfg.activation)
+        x = x + out
+        return x, new_cache
+
+    # ================================================================ train
+    def forward(self, params, tokens, *, lora=None, adapter_ids=None,
+                extra_embeds=None, mrope_positions=None):
+        """Full causal forward; returns (logits, moe_aux)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._embed(params, tokens, extra_embeds)
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        if cfg.rglru is not None:
+            x, aux = self._hybrid_full(params, x, positions, lora, adapter_ids)
+        else:
+            lora = lora or {}
+
+            def body(carry, xs):
+                x, aux = carry
+                lp, lsl = xs
+                fn = self._layer_full
+                if self.remat:
+                    policy = None
+                    if self.remat_policy == "dots":
+                        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    fn = jax.checkpoint(
+                        functools.partial(self._layer_full, kv_out=False),
+                        policy=policy,
+                    )
+                    x, a, _ = fn(lp, lsl, x, positions, adapter_ids, mrope_positions)
+                else:
+                    x, a, _ = fn(lp, lsl, x, positions, adapter_ids,
+                                 mrope_positions, kv_out=False)
+                return (x, aux + a), None
+
+            (x, aux), _ = self._scan_layers(body, (x, jnp.float32(0.0)),
+                                            (params["layers"], lora))
+        return self._unembed(params, x), aux
+
+    def _hybrid_full(self, params, x, positions, lora, adapter_ids):
+        cfg = self.cfg
+        types = self._layer_types()
+        ri = ai = 0
+        aux = jnp.float32(0.0)
+        for i, t in enumerate(types):
+            norms = _index(params["norms"], i)
+            h = rms_norm(x, norms["norm1"], cfg.norm_eps)
+            if t == "rec":
+                lp = _index(params["rec_layers"], ri)
+                st = rglru_state_init(cfg, x.shape[0], self.dtype)
+                mixed, _ = rglru_block(lp, h, st, cfg)
+                ri += 1
+            else:
+                lp = _index(params["attn_layers"], ai)
+                lsl = _index(lora, i) if lora else {}
+                mixed, _ = gqa_full(lp, h, positions, cfg, lora=lsl,
+                                    adapter_ids=adapter_ids,
+                                    lora_scale=self.lora_scale,
+                                    window=cfg.window_size,
+                                    q_chunk=self.q_chunk)
+                ai += 1
+            x = x + mixed
+            fp = _index(params["ffn_layers"], i)
+            h2 = rms_norm(x, norms["norm2"], cfg.norm_eps)
+            x = x + dense_ffn(fp, h2, cfg.activation)
+        return x, aux
+
+    # ============================================================== prefill
+    def prefill(self, params, tokens, max_len: int, *, lora=None,
+                adapter_ids=None, extra_embeds=None, mrope_positions=None):
+        """Fresh full prefill: returns (last-token logits, seeded cache)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._embed(params, tokens, extra_embeds)
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        if cfg.rglru is not None:
+            logits, cache = self._hybrid_cached(
+                params, self.init_cache(B, max_len), x,
+                jnp.zeros((B,), jnp.int32), lora, adapter_ids)
+            cache["len"] = jnp.full((B,), S, jnp.int32)
+            return logits, cache
+        lora = lora or {}
+        if cfg.rwkv is not None:
+            def body(x, xs):
+                lp, lsl = xs
+                st0 = rwkv_state_init(cfg, B, self.dtype)
+                xx, _, st = self._layer_full(lp, lsl, x, positions, adapter_ids,
+                                             None, kv_out=True)
+                return xx, st
+            x, states = self._scan_layers(body, x, (params["layers"], lora))
+            cache = dict(states)
+            cache["len"] = jnp.full((B,), S, jnp.int32)
+            return self._unembed(params, x[:, -1:, :]), cache
+
+        def body(x, xs):
+            lp, lsl = xs
+            xx, _, kv = self._layer_full(lp, lsl, x, positions, adapter_ids,
+                                         mrope_positions, kv_out=True)
+            return xx, kv
+
+        x, kvs = self._scan_layers(body, x, (params["layers"], lora))
+        pad = max_len - S
+        if cfg.mla is not None:
+            latent, krope = kvs
+            cache = {
+                "latent": jnp.pad(latent, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                "krope": jnp.pad(krope, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            }
+        else:
+            k, v = kvs
+            cache = {}
+            if self.kv_quant:
+                from .attention import quantize_kv_rows
+
+                k, ks = quantize_kv_rows(k)
+                v, vs = quantize_kv_rows(v)
+                cache["k_scale"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                cache["v_scale"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            cache["k"] = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["len"] = jnp.full((B,), S, jnp.int32)
+        return self._unembed(params, x[:, -1:, :]), cache
+
+    # ====================================================== extend / decode
+    def extend(self, params, cache, tokens, start, *, lora=None,
+               adapter_ids=None, extra_embeds=None, mrope_positions=None,
+               all_logits=False):
+        """Write ``tokens`` at per-row offsets ``start`` and return logits for
+        the chunk (chunked prefill / decode are the S>1 / S=1 cases)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._embed(params, tokens, extra_embeds)
+        if cfg.rglru is not None:
+            logits, cache2 = self._hybrid_cached(params, cache, x, start, lora,
+                                                 adapter_ids,
+                                                 all_logits=all_logits)
+            cache2["len"] = start + S
+            return logits, cache2
+        lora = lora or {}
+        clen = cache.pop("len")
+
+        def body(x, xs):
+            lp, lsl, lcache = xs
+            xx, new_cache = self._layer_cached(lp, lsl, lcache, x, start,
+                                               adapter_ids, mrope_positions)
+            return xx, new_cache
+
+        x, new_cache = self._scan_layers(body, x, (params["layers"], lora, cache))
+        cache["len"] = clen  # restore popped key on the input pytree
+        new_cache["len"] = start + S
+        out = x if all_logits else x[:, -1:, :]
+        return self._unembed(params, out), new_cache
+
+    def decode(self, params, cache, tokens, *, lora=None, adapter_ids=None,
+               mrope_positions=None):
+        """One-token decode step: tokens (B, 1); uses cache['len'] offsets."""
+        return self.extend(params, cache, tokens, cache["len"], lora=lora,
+                           adapter_ids=adapter_ids,
+                           mrope_positions=mrope_positions)
+
+    def _hybrid_cached(self, params, cache, x, start, lora, adapter_ids,
+                       all_logits=False):
+        cfg = self.cfg
+        types = self._layer_types()
+        B, S, _ = x.shape
+        positions = start[:, None] + jnp.arange(S)[None, :]
+        ri = ai = 0
+        new_h, new_conv, new_k, new_v = [], [], [], []
+        for i, t in enumerate(types):
+            norms = _index(params["norms"], i)
+            h = rms_norm(x, norms["norm1"], cfg.norm_eps)
+            if t == "rec":
+                lp = _index(params["rec_layers"], ri)
+                st = {"h": cache["h"][ri], "conv": cache["conv"][ri]}
+                mixed, st = rglru_block(lp, h, st, cfg)
+                new_h.append(st["h"])
+                new_conv.append(st["conv"])
+                ri += 1
+            else:
+                lp = _index(params["attn_layers"], ai)
+                lsl = _index(lora, i) if lora else {}
+                mixed, (ck, cv) = gqa_cached(
+                    lp, h, start, cache["k"][ai], cache["v"][ai], cfg,
+                    lora=lsl, adapter_ids=adapter_ids, lora_scale=self.lora_scale,
+                    window=cfg.window_size)
+                new_k.append(ck)
+                new_v.append(cv)
+                ai += 1
+            x = x + mixed
+            fp = _index(params["ffn_layers"], i)
+            h2 = rms_norm(x, norms["norm2"], cfg.norm_eps)
+            x = x + dense_ffn(fp, h2, cfg.activation)
+        new_cache = {
+            "h": jnp.stack(new_h),
+            "conv": jnp.stack(new_conv),
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "len": cache["len"],
+        }
+        out = x if all_logits else x[:, -1:, :]
+        return self._unembed(params, out), new_cache

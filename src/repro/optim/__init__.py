@@ -1,0 +1,28 @@
+"""Minimal production optimizer substrate (no external deps).
+
+AdamW with fp32 moments regardless of parameter dtype, global-norm clipping,
+cosine/linear schedules, and a LoRA-only masking helper for adapter
+fine-tuning (the paper's multi-LoRA setting).
+"""
+
+from .adamw import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    lora_only_mask,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "apply_updates",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "lora_only_mask",
+]

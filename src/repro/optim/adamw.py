@@ -1,0 +1,110 @@
+"""AdamW in pure JAX (fp32 moments, decoupled weight decay)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    lr: float | jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask=None,
+):
+    """Returns (new_params, new_state). ``mask`` (same pytree of bools)
+    freezes leaves where False — used for LoRA-only fine-tuning."""
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state.m
+    )
+    new_v = jax.tree.map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads,
+        state.v,
+    )
+
+    def upd(p, m, v):
+        delta = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    if mask is not None:
+        sel = lambda keep, new, old: new if keep else old  # mask is static bools
+        new_params = jax.tree.map(sel, mask, new_params, params)
+        new_m = jax.tree.map(sel, mask, new_m, state.m)
+        new_v = jax.tree.map(sel, mask, new_v, state.v)
+    return new_params, OptState(m=new_m, v=new_v, step=step)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def lora_only_mask(params_with_lora, lora_key: str = "lora"):
+    """Bool mask: True only under the ``lora`` subtree."""
+    def walk(tree, in_lora):
+        if isinstance(tree, dict):
+            return {k: walk(v, in_lora or k == lora_key) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(walk(v, in_lora) for v in tree)
+        return in_lora
+
+    return walk(params_with_lora, False)

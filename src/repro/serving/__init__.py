@@ -1,0 +1,14 @@
+"""Serving layer: continuous-batching engine with FASTLIBRA cache management."""
+
+from .engine import EngineConfig, ServingEngine
+from .metrics import ServingReport, summarize
+from .request import Phase, Request
+
+__all__ = [
+    "EngineConfig",
+    "Phase",
+    "Request",
+    "ServingEngine",
+    "ServingReport",
+    "summarize",
+]

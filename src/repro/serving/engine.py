@@ -1,0 +1,358 @@
+"""Real JAX multi-LoRA serving engine with FASTLIBRA cache management.
+
+Continuous-batching engine that actually executes prefill/decode in JAX on
+whatever backend is present (CPU here, TPU in production). The FASTLIBRA
+:class:`~repro.core.CacheManager` is the single source of truth for HBM
+block allocation; this engine is its data plane:
+
+* matched prefix nodes → ``PagedKVPool.gather`` into the dense running cache,
+* newly computed suffixes → ``PagedKVPool.scatter`` into pool blocks at
+  commit (paper: "new KVs are retained in HBM directly"),
+* swap ops from the performance-driven swapper → physical host↔device copies
+  (``PagedKVPool.swap_in/out``) and adapter slot loads (:class:`AdapterStore`),
+* dependency-tree bookkeeping (lookup → admit → pin → commit → unpin).
+
+The decode hot loop is one jitted ``model.extend`` over a fixed-slot dense
+cache; adapters batch through the SGMV path via per-row ``adapter_ids``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CacheManager, CacheSwapper, NodeKind, SwapKind, make_fastlibra
+from ..kvcache import KVPoolSpec, PagedKVPool
+from ..lora import AdapterStore
+from ..models import build_model
+from .metrics import ServingReport, summarize
+from .request import Phase, Request
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    hbm_bytes: int = 64 << 20  # CPU-test scale; 64 GB on the paper's NPU
+    host_bytes: int = 256 << 20
+    block_size: int = 16
+    max_batch_slots: int = 8
+    max_seq_len: int = 256
+    variant: str = "fastlibra"  # fastlibra|wom|wos|wol|vllm|slora
+    eos_token: int = -1  # -1: run to max_new_tokens
+    clock: Callable[[], float] = time.monotonic
+
+
+class ServingEngine:
+    def __init__(self, model_cfg, config: EngineConfig, key=None):
+        self.cfg = config
+        self.model_cfg = model_cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        self.model = build_model(model_cfg, dtype=jnp.float32)
+        self.params = self.model.init_params(k1)
+        spec = KVPoolSpec(
+            num_layers=model_cfg.num_layers,
+            block_size=config.block_size,
+            kv_heads=model_cfg.num_kv_heads,
+            head_dim=model_cfg.resolved_head_dim,
+            dtype=jnp.float32,
+            use_v=model_cfg.mla is None,
+        )
+        self.kv_spec = spec
+        self.manager, self.swapper = make_fastlibra(
+            config.hbm_bytes,
+            config.host_bytes,
+            kv_bytes_per_token=spec.bytes_per_token,
+            block_size=config.block_size,
+            variant=config.variant,
+        )
+        pool_blocks = self.manager.kv_pool.num_hbm_blocks
+        host_blocks = self.manager.kv_pool.num_host_blocks
+        self.kv_pool = PagedKVPool(spec, pool_blocks, host_blocks)
+        self.adapters = AdapterStore(
+            self.model, model_cfg.lora.max_adapters, key=k2
+        )
+        # dense running cache: fixed decode slots
+        B, T = config.max_batch_slots, config.max_seq_len
+        self.cache = self.model.init_cache(B, T)
+        self._slot_req: list[Optional[Request]] = [None] * B
+        self._free_slots = deque(range(B))
+        self.waiting: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._decode_fn = jax.jit(
+            lambda params, lora, cache, tokens, ids: self.model.extend(
+                params, cache, tokens, cache["len"], lora=lora, adapter_ids=ids
+            )
+        )
+        self._start_time: Optional[float] = None
+        self._batch_sizes: deque[tuple[float, int]] = deque()
+
+    # ----------------------------------------------------------------- LoRA
+    def register_adapter(self, adapter_id: str, key=None) -> None:
+        key = key if key is not None else jax.random.PRNGKey(hash(adapter_id) % (1 << 30))
+        aw = self.adapters.register(adapter_id, key)
+        self.manager.register_lora(adapter_id, aw.nbytes, now=self._now())
+
+    # ------------------------------------------------------------- requests
+    def submit(self, request: Request) -> None:
+        request.submit_time = self._now()
+        self.waiting.append(request)
+
+    def _now(self) -> float:
+        if self._start_time is None:
+            self._start_time = self.cfg.clock()
+        return self.cfg.clock() - self._start_time
+
+    # ------------------------------------------------------------ main loop
+    def run(self, max_steps: int = 10_000) -> ServingReport:
+        """Drive until all submitted requests finish (or step budget)."""
+        steps = 0
+        while (self.waiting or any(self._slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        wall = self._now()
+        return summarize(
+            self.finished,
+            wall,
+            kv_hit_rate=self.manager.stats.kv_hit_rate(),
+            lora_hit_rate=self.manager.stats.lora_hit_rate(),
+            invalid_kv_fraction=self.manager.invalid_kv_fraction(),
+            hbm_utilization=self.manager.hbm_usage(),
+        )
+
+    def step(self) -> None:
+        now = self._now()
+        if self.swapper.due(now):
+            self._observe_batch_size(now)
+            self.swapper.tick(now)
+            self._execute_swaps(self.manager.drain_ops())
+        self._admit_waiting()
+        self._decode_once()
+
+    # ---------------------------------------------------------------- admit
+    def _admit_waiting(self) -> None:
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            now = self._now()
+            # match against prompt[:-1]: the last token is always recomputed
+            # so prefill yields logits for it (vLLM semantics).
+            lk = self.manager.lookup(req.adapter_id, req.prompt[:-1], now)
+            adm = self.manager.admit(lk, now)
+            if adm.queued:
+                self._execute_swaps(self.manager.drain_ops())
+                break  # HBM saturated; retry next step
+            suffix_len = len(req.prompt) - lk.match.matched_tokens
+            total_new = suffix_len + req.max_new_tokens
+            blocks = self.manager.allocate_running(req.request_id, total_new, now)
+            if blocks is None:
+                self.manager.unpin(adm.pinned)
+                self._execute_swaps(self.manager.drain_ops())
+                break
+            t0 = self._now()
+            # drained ops include demand evictions that freed this query's
+            # blocks — execute them before touching the pool physically
+            self._execute_swaps(self.manager.drain_ops(), req=req)
+            self.waiting.popleft()
+            req.lookup = lk
+            req.pinned = adm.pinned
+            req.matched_tokens = lk.match.matched_tokens
+            req.hbm_hit_tokens = lk.hbm_hit_tokens
+            req.admit_time = t0
+            req.slot = self._free_slots.popleft()
+            self._slot_req[req.slot] = req
+            self._prefill(req)
+
+    def _prefill(self, req: Request) -> None:
+        """Gather matched prefix into the slot's dense cache rows, then run
+        the suffix through ``model.extend`` (exact shapes, per request)."""
+        slot = req.slot
+        m = req.lookup.match
+        prefix_len = m.matched_tokens
+        # load matched prefix KV from pool blocks into the dense cache
+        if prefix_len > 0:
+            block_ids = [b for n in m.kv_nodes for b in n.hbm_blocks]
+            k, v = self.kv_pool.gather(block_ids)
+            self._write_dense(slot, 0, k, v)
+        # ensure adapter slot present
+        aid = self.adapters.slot_of(req.adapter_id)
+        if aid is None:
+            aid = self.adapters.load(req.adapter_id)
+        suffix = jnp.asarray(req.prompt[prefix_len:], jnp.int32)[None, :]
+        self._set_len(slot, prefix_len)
+        start = jnp.asarray(self.cache["len"])
+        ids = self._adapter_ids()
+        single = {k: v for k, v in self.cache.items()}
+        logits, new_cache = self.model.extend(
+            self.params, single, self._pad_rows(suffix, slot),
+            start, lora=self.adapters.slots, adapter_ids=ids,
+        )
+        # only this slot's rows advanced meaningfully; fix other rows' len
+        self._merge_cache(new_cache, rows=[slot])
+        req.phase = Phase.DECODE
+        tok = int(jnp.argmax(logits[slot, -1]))
+        req.generated.append(tok)
+        req.first_token_time = self._now()
+        self._maybe_finish(req)
+
+    def _pad_rows(self, row_tokens: jax.Array, slot: int) -> jax.Array:
+        """Broadcast a single request's tokens into a full-slot batch."""
+        B = self.cfg.max_batch_slots
+        S = row_tokens.shape[1]
+        out = jnp.zeros((B, S), jnp.int32)
+        return out.at[slot].set(row_tokens[0])
+
+    # --------------------------------------------------------------- decode
+    def _decode_once(self) -> None:
+        active = [r for r in self._slot_req if r is not None and r.phase is Phase.DECODE]
+        if not active:
+            return
+        B = self.cfg.max_batch_slots
+        tokens = np.zeros((B, 1), np.int32)
+        for r in active:
+            tokens[r.slot, 0] = r.generated[-1]
+        ids = self._adapter_ids()
+        logits, new_cache = self._decode_fn(
+            self.params, self.adapters.slots, self.cache,
+            jnp.asarray(tokens), ids,
+        )
+        self._merge_cache(new_cache, rows=[r.slot for r in active])
+        toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        for r in active:
+            r.generated.append(int(toks[r.slot]))
+            self._maybe_finish(r)
+
+    def _maybe_finish(self, req: Request) -> None:
+        done = len(req.generated) >= req.max_new_tokens
+        if self.cfg.eos_token >= 0 and req.generated[-1] == self.cfg.eos_token:
+            done = True
+        if not done:
+            return
+        now = self._now()
+        req.finish_time = now
+        req.phase = Phase.FINISHED
+        self._commit(req, now)
+        self._slot_req[req.slot] = None
+        self._free_slots.append(req.slot)
+        self.finished.append(req)
+
+    def _commit(self, req: Request, now: float) -> None:
+        """Scatter the request's new KV into its running blocks and fold them
+        into the dependency tree."""
+        m = req.lookup.match
+        prefix = m.matched_tokens
+        full = req.full_tokens
+        bs = self.cfg.block_size
+        suffix_total = len(full) - prefix
+        cache_tokens = (suffix_total // bs) * bs
+        if cache_tokens > 0 and self.manager.config.reuse_history_kv:
+            blocks = self.manager.running_blocks(req.request_id)
+            keep = blocks[: cache_tokens // bs]
+            k, v = self._read_dense(req.slot, prefix, prefix + cache_tokens)
+            self.kv_pool.scatter(keep, k, v)
+        self.manager.commit(req.request_id, req.lookup, full, now)
+        self.manager.unpin(req.pinned)
+
+    # ------------------------------------------------------------ swaps
+    def _execute_swaps(self, ops, req: Optional[Request] = None) -> None:
+        for op in ops:
+            t0 = self._now()
+            if op.node_kind is NodeKind.LORA:
+                if op.kind is SwapKind.SWAP_IN:
+                    self.adapters.load(op.lora_id)
+                elif op.kind in (SwapKind.SWAP_OUT, SwapKind.DROP):
+                    self.adapters.unload(op.lora_id)
+                if req is not None and op.kind is SwapKind.SWAP_IN:
+                    req.lora_coldstart += self._now() - t0
+            else:
+                if op.kind is SwapKind.SWAP_IN:
+                    self.kv_pool.swap_in(op.src_blocks, op.dst_blocks)
+                    if req is not None:
+                        req.kv_coldstart += self._now() - t0
+                elif op.kind is SwapKind.SWAP_OUT:
+                    self.kv_pool.swap_out(op.src_blocks, op.dst_blocks)
+                # DROP: nothing physical to do
+
+    # ------------------------------------------------------------- helpers
+    def _adapter_ids(self) -> jax.Array:
+        ids = np.zeros((self.cfg.max_batch_slots,), np.int32)
+        for r in self._slot_req:
+            if r is not None:
+                s = self.adapters.slot_of(r.adapter_id)
+                ids[r.slot] = s if s is not None else 0
+        return jnp.asarray(ids)
+
+    def _set_len(self, slot: int, value: int) -> None:
+        self.cache["len"] = self.cache["len"].at[slot].set(value)
+
+    def _merge_cache(self, new_cache: dict, rows: list[int]) -> None:
+        """Adopt updated rows from ``new_cache``; keep other rows unchanged."""
+        B = self.cfg.max_batch_slots
+        mask = np.zeros((B,), bool)
+        for r in rows:
+            mask[r] = True
+        sel = jnp.asarray(mask)
+
+        def pick(new, old):
+            if new.ndim == 0:
+                return new
+            # row axis: 'len' is (B,); layer-stacked arrays are (L, B, ...)
+            if new.shape[0] == B and new.ndim >= 1:
+                m = sel.reshape((B,) + (1,) * (new.ndim - 1))
+            elif new.ndim >= 2 and new.shape[1] == B:
+                m = sel.reshape((1, B) + (1,) * (new.ndim - 2))
+            else:
+                return new
+            return jnp.where(m, new, old)
+
+        self.cache = jax.tree.map(pick, new_cache, self.cache)
+
+    def _write_dense(self, slot: int, start: int, k, v) -> None:
+        """Place gathered prefix KV (L, T, H, D) into the dense cache rows."""
+        T = k.shape[1]
+        if self.model_cfg.mla is not None:
+            m = self.model_cfg.mla
+            latent = k[..., 0, : m.kv_lora_rank]
+            krope = k[..., 0, m.kv_lora_rank : m.kv_lora_rank + m.qk_rope_head_dim]
+            self.cache["latent"] = jax.lax.dynamic_update_slice(
+                self.cache["latent"], latent[:, None].astype(self.cache["latent"].dtype),
+                (0, slot, start, 0))
+            self.cache["krope"] = jax.lax.dynamic_update_slice(
+                self.cache["krope"], krope[:, None].astype(self.cache["krope"].dtype),
+                (0, slot, start, 0))
+            return
+        self.cache["k"] = jax.lax.dynamic_update_slice(
+            self.cache["k"], k[:, None].astype(self.cache["k"].dtype),
+            (0, slot, start, 0, 0))
+        self.cache["v"] = jax.lax.dynamic_update_slice(
+            self.cache["v"], v[:, None].astype(self.cache["v"].dtype),
+            (0, slot, start, 0, 0))
+
+    def _read_dense(self, slot: int, start: int, end: int):
+        """Read dense cache rows back as (L, T, H, D) for pool scatter."""
+        if self.model_cfg.mla is not None:
+            latent = self.cache["latent"][:, slot, start:end]
+            krope = self.cache["krope"][:, slot, start:end]
+            m = self.model_cfg.mla
+            D = self.kv_spec.head_dim
+            k = jnp.concatenate([latent, krope], axis=-1)
+            pad = D - k.shape[-1]
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad)))
+            return k[:, :, None, :], None
+        k = self.cache["k"][:, slot, start:end]
+        v = self.cache["v"][:, slot, start:end]
+        return k, v
+
+    def _observe_batch_size(self, now: float) -> None:
+        n = sum(1 for r in self._slot_req if r is not None)
+        self._batch_sizes.append((now, n))
+        while self._batch_sizes and self._batch_sizes[0][0] < now - 5.0:
+            self._batch_sizes.popleft()
+        if self._batch_sizes:
+            avg = sum(b for _, b in self._batch_sizes) / len(self._batch_sizes)
+            self.swapper.observe_batch_size(avg)

@@ -1,0 +1,65 @@
+"""Serving metrics aggregation (TTFT / TPOT / throughput / breakdowns)."""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Iterable
+
+from .request import Request
+
+
+@dataclasses.dataclass
+class ServingReport:
+    n_finished: int
+    avg_ttft: float
+    p99_ttft: float
+    avg_tpot: float
+    avg_queue: float
+    avg_lora_coldstart: float
+    avg_kv_coldstart: float
+    throughput_qps: float
+    kv_hit_rate: float
+    lora_hit_rate: float
+    invalid_kv_fraction: float
+    hbm_utilization: float
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _p(vals, q):
+    if not vals:
+        return 0.0
+    vals = sorted(vals)
+    idx = min(len(vals) - 1, int(q * len(vals)))
+    return vals[idx]
+
+
+def summarize(
+    finished: Iterable[Request],
+    wall_time: float,
+    *,
+    kv_hit_rate: float = 0.0,
+    lora_hit_rate: float = 0.0,
+    invalid_kv_fraction: float = 0.0,
+    hbm_utilization: float = 0.0,
+) -> ServingReport:
+    reqs = [r for r in finished if r.ttft is not None]
+    ttfts = [r.ttft for r in reqs]
+    tpots = [r.tpot for r in reqs if r.tpot is not None]
+    queues = [r.queue_time for r in reqs if r.queue_time is not None]
+    return ServingReport(
+        n_finished=len(reqs),
+        avg_ttft=statistics.fmean(ttfts) if ttfts else 0.0,
+        p99_ttft=_p(ttfts, 0.99),
+        avg_tpot=statistics.fmean(tpots) if tpots else 0.0,
+        avg_queue=statistics.fmean(queues) if queues else 0.0,
+        avg_lora_coldstart=statistics.fmean([r.lora_coldstart for r in reqs]) if reqs else 0.0,
+        avg_kv_coldstart=statistics.fmean([r.kv_coldstart for r in reqs]) if reqs else 0.0,
+        throughput_qps=len(reqs) / wall_time if wall_time > 0 else 0.0,
+        kv_hit_rate=kv_hit_rate,
+        lora_hit_rate=lora_hit_rate,
+        invalid_kv_fraction=invalid_kv_fraction,
+        hbm_utilization=hbm_utilization,
+    )

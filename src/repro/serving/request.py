@@ -1,0 +1,62 @@
+"""Request model + per-request latency accounting."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+    ABORTED = "aborted"
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    adapter_id: str
+    prompt: tuple[int, ...]
+    max_new_tokens: int
+    submit_time: float = 0.0
+    # filled during serving
+    phase: Phase = Phase.WAITING
+    generated: list[int] = dataclasses.field(default_factory=list)
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # cold-start breakdown (paper Fig. 12)
+    lora_coldstart: float = 0.0
+    kv_coldstart: float = 0.0
+    matched_tokens: int = 0
+    hbm_hit_tokens: int = 0
+    # engine bookkeeping
+    slot: int = -1
+    lookup: object = None
+    pinned: list = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        n = max(1, len(self.generated) - 1)
+        return (self.finish_time - self.first_token_time) / n
+
+    @property
+    def queue_time(self) -> Optional[float]:
+        if self.admit_time is None:
+            return None
+        return self.admit_time - self.submit_time
+
+    @property
+    def full_tokens(self) -> tuple[int, ...]:
+        return self.prompt + tuple(self.generated)

@@ -1,0 +1,383 @@
+"""Discrete-event multi-LoRA serving simulator.
+
+Drives the *real* FASTLIBRA control plane (``repro.core`` — the identical
+code the JAX engine uses) with a virtual clock and the paper's NPU timing
+model, so the paper's figures can be reproduced at Llama-7B/13B/34B scale on
+a CPU container. The simulation is iteration-driven (like real continuous-
+batching engines): each loop admits ready queries, runs one prefill+decode
+iteration whose duration comes from :class:`DeployedModel`, and advances
+virtual time.
+
+Async swap modelling: host↔HBM transfers queue on full-duplex PCIe channels;
+control-plane state flips instantly (the manager's view) but a query whose
+required LoRA / KV nodes are still in flight cannot start prefill until its
+``ready_time`` — this is exactly the cold-start component of TTFT the paper
+measures (Fig. 12 breakdown).
+
+Straggler mitigation (beyond-paper): if an inbound transfer would delay a
+query past ``straggler_timeout``, the simulator falls back to recomputing
+the prefix (hedged recompute) and counts the mitigation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import statistics
+from collections import deque
+from typing import Optional
+
+from ..core import CacheManager, CacheSwapper, NodeKind, SwapKind, make_fastlibra
+from ..core.cost_model import HardwareModel
+from ..data.traces import SimQuery
+from .hardware import DeployedModel
+
+
+@dataclasses.dataclass
+class SimConfig:
+    variant: str = "fastlibra"
+    max_batch: int = 32
+    block_size: int = 32
+    lora_rank_choices: tuple[int, ...] = (32, 64)
+    activation_reserve: float = 0.10
+    straggler_p: float = 0.0  # probability a transfer is 10x slow
+    straggler_timeout: float = 1.0
+    sample_period: float = 5.0  # timeline sampling
+
+
+@dataclasses.dataclass
+class SimRequest:
+    query: SimQuery
+    ready_time: float = 0.0
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    matched_tokens: int = 0
+    hbm_hit_tokens: int = 0
+    lora_coldstart: float = 0.0
+    kv_coldstart: float = 0.0
+    queue_time: float = 0.0
+    tokens_done: int = 0
+    lookup: object = None
+    pinned: list = dataclasses.field(default_factory=list)
+    rid: str = ""
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.query.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        return (self.finish_time - self.first_token_time) / max(
+            1, self.query.output_len - 1
+        )
+
+
+@dataclasses.dataclass
+class SimResult:
+    finished: list[SimRequest]
+    timeline: list[dict]
+    duration: float
+    manager: CacheManager
+    straggler_mitigations: int = 0
+
+    @property
+    def avg_ttft(self) -> float:
+        v = [r.ttft for r in self.finished if r.ttft is not None]
+        return statistics.fmean(v) if v else 0.0
+
+    @property
+    def avg_tpot(self) -> float:
+        v = [r.tpot for r in self.finished if r.tpot is not None]
+        return statistics.fmean(v) if v else 0.0
+
+    @property
+    def avg_queue(self) -> float:
+        v = [r.queue_time for r in self.finished]
+        return statistics.fmean(v) if v else 0.0
+
+    @property
+    def avg_lora_coldstart(self) -> float:
+        v = [r.lora_coldstart for r in self.finished]
+        return statistics.fmean(v) if v else 0.0
+
+    @property
+    def avg_kv_coldstart(self) -> float:
+        v = [r.kv_coldstart for r in self.finished]
+        return statistics.fmean(v) if v else 0.0
+
+    def summary(self) -> dict:
+        s = self.manager.stats
+        inv = [t["invalid_kv"] for t in self.timeline] or [0.0]
+        hbm = [t["hbm_usage"] for t in self.timeline] or [0.0]
+        return {
+            "n": len(self.finished),
+            "avg_ttft": self.avg_ttft,
+            "avg_tpot": self.avg_tpot,
+            "avg_queue": self.avg_queue,
+            "avg_lora_cold": self.avg_lora_coldstart,
+            "avg_kv_cold": self.avg_kv_coldstart,
+            "kv_hit_rate": s.kv_hit_rate(),
+            "lora_hit_rate": s.lora_hit_rate(),
+            "avg_invalid_kv": statistics.fmean(inv),
+            "avg_hbm_usage": statistics.fmean(hbm),
+            "throughput": len(self.finished) / max(1e-9, self.duration),
+        }
+
+
+class ServingSimulator:
+    def __init__(
+        self,
+        deployed: DeployedModel,
+        trace: list[SimQuery],
+        config: Optional[SimConfig] = None,
+        seed: int = 0,
+    ):
+        import random
+
+        self.cfg = config or SimConfig()
+        self.hw = deployed
+        self.trace = trace
+        self.rng = random.Random(seed)
+        pool_bytes = deployed.hbm_pool_bytes(self.cfg.activation_reserve)
+        hw_model = HardwareModel(
+            pcie_bw_bytes=deployed.npu.pcie_bw,
+            pcie_latency_s=deployed.npu.pcie_latency,
+            hbm_bytes=pool_bytes,
+            host_bytes=deployed.npu.host_bytes,
+            flops_fp16=deployed.npu.flops_fp16 * deployed.cards,
+        )
+        self.manager, self.swapper = make_fastlibra(
+            pool_bytes,
+            deployed.npu.host_bytes,
+            kv_bytes_per_token=deployed.kv_bytes_per_token,
+            block_size=self.cfg.block_size,
+            hardware=hw_model,
+            variant=self.cfg.variant,
+        )
+        # register every LoRA in the trace (host-resident at t=0)
+        for lid in sorted({q.lora_id for q in trace}):
+            rank = self.rng.choice(self.cfg.lora_rank_choices)
+            nbytes = deployed.cfg.lora_bytes(rank, deployed.npu.dtype_bytes)
+            self.manager.register_lora(lid, nbytes, now=0.0)
+        # PCIe full-duplex channels: (free_at) per direction
+        self._pcie_in = 0.0
+        self._pcie_out = 0.0
+        self._out_done = 0.0
+        self._node_ready: dict[int, float] = {}
+        self.straggler_mitigations = 0
+
+    # ------------------------------------------------------------ transfers
+    def _schedule_transfer(self, nbytes: int, now: float, inbound: bool) -> float:
+        t = self.hw.transfer_time(nbytes)
+        if self.cfg.straggler_p and self.rng.random() < self.cfg.straggler_p:
+            t *= 10.0
+        if inbound:
+            start = max(now, self._pcie_in)
+            self._pcie_in = start + t
+            return self._pcie_in
+        start = max(now, self._pcie_out)
+        self._pcie_out = start + t
+        return self._pcie_out
+
+    def _execute_ops(self, ops, now: float) -> None:
+        self._out_done = now
+        for op in ops:
+            if op.kind is SwapKind.SWAP_IN:
+                done = self._schedule_transfer(op.nbytes, now, inbound=True)
+                self._node_ready[op.node_id] = done
+            elif op.kind is SwapKind.SWAP_OUT:
+                self._out_done = max(
+                    self._out_done,
+                    self._schedule_transfer(op.nbytes, now, inbound=False),
+                )
+
+    # ------------------------------------------------------------ main loop
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        arrivals = [(q.arrival, i, q) for i, q in enumerate(self.trace)]
+        heapq.heapify(arrivals)
+        waiting: deque[SimRequest] = deque()
+        pending: list[SimRequest] = []  # admitted, waiting on transfers
+        running: list[SimRequest] = []
+        finished: list[SimRequest] = []
+        timeline: list[dict] = []
+        now = 0.0
+        next_sample = 0.0
+        rid = 0
+        batch_window: deque[tuple[float, int]] = deque()
+
+        recent_ttfts: deque[tuple[float, float]] = deque()
+
+        def sample(now):
+            while recent_ttfts and recent_ttfts[0][0] < now - cfg.sample_period:
+                recent_ttfts.popleft()
+            window = [v for _, v in recent_ttfts]
+            bd = self.manager.hbm_breakdown()
+            timeline.append({
+                "t": now,
+                "hbm_usage": self.manager.hbm_usage(),
+                "invalid_kv": self.manager.invalid_kv_fraction(),
+                "resident_loras": self.manager.tree.resident_lora_count(),
+                "running": len(running),
+                "waiting": len(waiting) + len(pending),
+                "window_ttft": statistics.fmean(window) if window else 0.0,
+                **bd,
+            })
+
+        while arrivals or waiting or pending or running:
+            # pull arrivals
+            while arrivals and arrivals[0][0] <= now:
+                _, _, q = heapq.heappop(arrivals)
+                rid += 1
+                waiting.append(SimRequest(query=q, rid=f"q{rid}"))
+            # periodic swapper (proactive: transfers happen in the background,
+            # off every query's critical path — FASTLIBRA's key advantage)
+            if self.swapper.due(now):
+                batch_window.append((now, len(running)))
+                while batch_window and batch_window[0][0] < now - 5.0:
+                    batch_window.popleft()
+                if batch_window:
+                    self.swapper.observe_batch_size(
+                        sum(b for _, b in batch_window) / len(batch_window)
+                    )
+                self.swapper.tick(now)
+                self._execute_ops(self.manager.drain_ops(), now)
+            # admit
+            while waiting and len(running) + len(pending) < cfg.max_batch:
+                r = waiting[0]
+                q = r.query
+                lk = self.manager.lookup(q.lora_id, q.prompt[:-1], now)
+                adm = self.manager.admit(lk, now)
+                if adm.queued:
+                    self._execute_ops(self.manager.drain_ops(), now)
+                    break
+                # lazy allocation (vLLM semantics): prefill blocks now, decode
+                # blocks one iteration at a time (stall when HBM is full)
+                need = len(q.prompt) - lk.match.matched_tokens
+                blocks = self.manager.allocate_running(r.rid, need, now)
+                if blocks is None:
+                    self.manager.unpin(adm.pinned)
+                    self._execute_ops(self.manager.drain_ops(), now)
+                    break
+                waiting.popleft()
+                r.lookup = lk
+                r.pinned = adm.pinned
+                r.matched_tokens = lk.match.matched_tokens
+                r.hbm_hit_tokens = lk.hbm_hit_tokens
+                r.admit_time = now
+                r.queue_time = now - q.arrival
+                # everything this admission moved — swap-ins of the needed
+                # nodes AND demand-eviction swap-outs that freed its blocks —
+                # is on this query's critical path (synchronous cold start)
+                ops = self.manager.drain_ops()
+                self._execute_ops(ops, now)
+                ready = now
+                for op in ops:
+                    if op.kind is SwapKind.SWAP_IN:
+                        done = self._node_ready.get(op.node_id, now)
+                        if op.node_kind is NodeKind.LORA:
+                            r.lora_coldstart += max(0.0, done - now)
+                        else:
+                            r.kv_coldstart += max(0.0, done - now)
+                        ready = max(ready, done)
+                    elif op.kind is SwapKind.SWAP_OUT:
+                        done = self._out_done
+                        r.kv_coldstart += max(0.0, done - now)
+                        ready = max(ready, done)
+                # also wait for matched nodes already in flight
+                for n in lk.match.kv_nodes:
+                    ready = max(ready, self._node_ready.get(n.node_id, now))
+                if lk.match.lora_node is not None:
+                    ready = max(
+                        ready, self._node_ready.get(lk.match.lora_node.node_id, now)
+                    )
+                # straggler mitigation: recompute instead of waiting too long
+                if ready - now > cfg.straggler_timeout:
+                    self.straggler_mitigations += 1
+                    r.matched_tokens = 0
+                    r.hbm_hit_tokens = 0
+                    ready = now
+                r.ready_time = ready
+                pending.append(r)
+            # build one iteration
+            ready_prefills = [r for r in pending if r.ready_time <= now]
+            if ready_prefills or running:
+                t_iter = 0.0
+                for r in ready_prefills:
+                    pending.remove(r)
+                    q = r.query
+                    new = len(q.prompt) - r.matched_tokens
+                    t_iter += self.hw.prefill_time(new, r.matched_tokens)
+                ctx = sum(
+                    len(r.query.prompt) + r.tokens_done for r in running
+                )
+                t_iter += self.hw.decode_time(len(running), ctx)
+                now += max(t_iter, 1e-6)
+                for r in ready_prefills:
+                    r.first_token_time = now
+                    r.tokens_done = 1
+                    recent_ttfts.append((now, r.ttft))
+                    running.append(r)
+                still = []
+                any_progress = bool(ready_prefills)
+                stalled: list[SimRequest] = []
+                for r in running:
+                    if r in ready_prefills:
+                        pass
+                    else:
+                        # decode KV growth is allocated lazily; a full pool
+                        # stalls the request this iteration (TPOT grows)
+                        got = self.manager.allocate_running(r.rid, 1, now)
+                        if got is None:
+                            stalled.append(r)
+                            continue
+                        r.tokens_done += 1
+                        any_progress = True
+                    if r.tokens_done >= r.query.output_len:
+                        r.finish_time = now
+                        self.manager.commit(r.rid, r.lookup, r.query.full, now)
+                        self.manager.unpin(r.pinned)
+                        finished.append(r)
+                    else:
+                        still.append(r)
+                # decode-growth evictions transfer in the background
+                self._execute_ops(self.manager.drain_ops(), now)
+                if stalled and not any_progress:
+                    # every running request is blocked on HBM: preempt the
+                    # youngest (vLLM-style recompute preemption) to unblock
+                    victim = max(stalled, key=lambda r: r.query.arrival)
+                    stalled.remove(victim)
+                    self.manager.abort_running(victim.rid)
+                    self.manager.unpin(victim.pinned)
+                    victim.tokens_done = 0
+                    victim.first_token_time = None
+                    waiting.appendleft(victim)
+                running = still + stalled
+            else:
+                # idle: jump to the next event
+                nxt = []
+                if arrivals:
+                    nxt.append(arrivals[0][0])
+                if pending:
+                    nxt.append(min(r.ready_time for r in pending))
+                if waiting:
+                    nxt.append(now + self.swapper.config.monitor_interval)
+                if not nxt:
+                    break
+                now = max(now + 1e-6, min(nxt))
+            if now >= next_sample:
+                sample(now)
+                next_sample = now + cfg.sample_period
+        sample(now)
+        return SimResult(
+            finished=finished,
+            timeline=timeline,
+            duration=now,
+            manager=self.manager,
+            straggler_mitigations=self.straggler_mitigations,
+        )

@@ -1,0 +1,203 @@
+"""Integration tests for the cache manager + swapper (FASTLIBRA §4–5)."""
+
+import pytest
+
+from repro.core import (
+    CacheManager,
+    HardwareModel,
+    ManagerConfig,
+    NodeKind,
+    Residency,
+    SwapKind,
+    Tier,
+    make_fastlibra,
+)
+
+KVB = 1024  # bytes per token (tiny, test-friendly)
+BS = 4  # tokens per block
+BLOCK_BYTES = KVB * BS
+
+
+def mgr_pair(variant="fastlibra", hbm_blocks=64, host_blocks=256):
+    return make_fastlibra(
+        hbm_bytes=hbm_blocks * BLOCK_BYTES,
+        host_bytes=host_blocks * BLOCK_BYTES,
+        kv_bytes_per_token=KVB,
+        block_size=BS,
+        variant=variant,
+    )
+
+
+def run_query(mgr, qid, lora, tokens, now, new_tokens=8):
+    """Helper: full query lifecycle against the manager."""
+    lk = mgr.lookup(lora, tokens, now)
+    adm = mgr.admit(lk, now)
+    assert not adm.queued
+    blocks = mgr.allocate_running(qid, len(tokens) - lk.match.matched_tokens + new_tokens, now)
+    assert blocks is not None
+    full = tuple(tokens) + tuple(range(1000, 1000 + new_tokens))
+    node = mgr.commit(qid, lk, full, now)
+    mgr.unpin(adm.pinned)
+    return lk, node
+
+
+def test_register_and_swap_in_lora():
+    mgr, _ = mgr_pair()
+    op = mgr.register_lora("l1", size_bytes=2 * BLOCK_BYTES, now=0.0)
+    assert op.kind is SwapKind.LOAD_NEW
+    node = mgr.tree.lora_node("l1")
+    assert node.tier is Residency.HOST and len(node.host_blocks) == 2
+    lk = mgr.lookup("l1", (), now=1.0)
+    assert not lk.lora_resident and lk.swap_in_nodes == [node]
+    adm = mgr.admit(lk, now=1.0)
+    assert node.tier is Residency.HBM
+    assert [o.kind for o in adm.ops] == [SwapKind.SWAP_IN]
+    assert adm.ops[0].nbytes == 2 * BLOCK_BYTES
+    mgr.check_invariants()
+
+
+def test_commit_inserts_block_aligned_suffix():
+    mgr, _ = mgr_pair()
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    lk, node = run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=10)
+    # 10 tokens -> 2 full blocks cached (8 tokens), partial tail freed
+    assert node is not None and node.num_tokens == 8
+    assert len(node.hbm_blocks) == 2
+    mgr.check_invariants()
+
+
+def test_prefix_reuse_across_queries():
+    mgr, _ = mgr_pair()
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    _, node = run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=8)
+    hist = node.path_tokens()
+    lk2 = mgr.lookup("l1", hist, now=2.0)
+    assert lk2.hbm_hit_tokens == 8
+    assert lk2.match.matched_tokens == 8
+
+
+def test_validity_invariant_maintained_under_pressure():
+    mgr, _ = mgr_pair(hbm_blocks=8, host_blocks=64)
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    mgr.register_lora("l2", BLOCK_BYTES, now=0.0)
+    now = 1.0
+    for i in range(6):
+        lora = "l1" if i % 2 == 0 else "l2"
+        run_query(mgr, f"q{i}", lora, (), now=now, new_tokens=8)
+        now += 1.0
+        mgr.check_invariants()
+    assert mgr.invalid_kv_fraction() == 0.0
+
+
+def test_wom_variant_can_produce_invalid_kvs():
+    mgr, _ = mgr_pair(variant="wom", hbm_blocks=6, host_blocks=64)
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    mgr.register_lora("l2", BLOCK_BYTES, now=0.0)
+    run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=8)
+    # force pressure so l1's LoRA can be evicted while its KVs stay
+    run_query(mgr, "q1", "l2", (), now=2.0, new_tokens=8)
+    # at most 6 blocks: the manager had to evict *something* independent of
+    # the tree structure; dependency violations are possible in this variant.
+    # We assert the invariant checker does NOT run for wom (config off) and
+    # that the fraction is measurable (>= 0).
+    assert mgr.invalid_kv_fraction() >= 0.0
+    assert not mgr.config.maintain_dependencies
+
+
+def test_slora_variant_discards_history():
+    mgr, _ = mgr_pair(variant="slora")
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    lk, node = run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=8)
+    assert node is None  # no KV retention
+    lk2 = mgr.lookup("l1", tuple(range(1000, 1008)), now=2.0)
+    assert lk2.hbm_hit_tokens == 0
+
+
+def test_vllm_variant_static_partition():
+    mgr, _ = mgr_pair(variant="vllm", hbm_blocks=10)
+    assert mgr.lora_pool is not mgr.kv_pool
+    assert mgr.lora_pool.num_hbm_blocks == 2  # 0.2 ratio
+    assert mgr.kv_pool.num_hbm_blocks == 8
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=8)
+    mgr.pool.check_invariants()
+
+
+def test_eviction_prefers_low_eval():
+    mgr, sw = mgr_pair(hbm_blocks=8, host_blocks=64)
+    mgr.register_lora("hot", BLOCK_BYTES, now=0.0)
+    mgr.register_lora("cold", BLOCK_BYTES, now=0.0)
+    # hot LoRA visited many times, cold once, long ago
+    for i in range(10):
+        mgr.lookup("hot", (), now=float(i))
+    mgr.lookup("cold", (), now=0.0)
+    lk = mgr.lookup("hot", (), now=10.0)
+    adm = mgr.admit(lk, now=10.0)
+    lkc = mgr.lookup("cold", (), now=10.5)
+    admc = mgr.admit(lkc, now=10.5)
+    mgr.unpin(adm.pinned)
+    mgr.unpin(admc.pinned)
+    # fill HBM with running blocks to force eviction of one LoRA
+    blocks = mgr.allocate_running("big", 7 * BS, now=11.0)
+    assert blocks is not None
+    hot, cold = mgr.tree.lora_node("hot"), mgr.tree.lora_node("cold")
+    assert hot.tier is Residency.HBM
+    assert cold.tier is Residency.HOST  # the colder one was chosen
+
+
+def test_swapper_prefetch_on_idle():
+    mgr, sw = mgr_pair(hbm_blocks=64, host_blocks=64)
+    for i in range(5):
+        mgr.register_lora(f"l{i}", BLOCK_BYTES, now=0.0)
+        mgr.lookup(f"l{i}", (), now=0.1 * i)
+    sw.observe_batch_size(4.0)
+    ops = sw.tick(now=1.0)
+    # idle HBM (0% < 70%): all 5 LoRAs prefetched host->HBM
+    assert sum(1 for o in ops if o.kind is SwapKind.SWAP_IN) == 5
+    assert mgr.tree.resident_lora_count() == 5
+
+
+def test_swapper_evicts_on_busy():
+    mgr, sw = mgr_pair(hbm_blocks=10, host_blocks=64)
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    run_query(mgr, "q0", "l1", (), now=0.5, new_tokens=8 * BS)
+    # HBM now holds lora(1) + 8 kv blocks = 9/10 blocks = 90% -> not busy
+    assert mgr.hbm_usage() == pytest.approx(0.9)
+    mgr.allocate_running("q1", BS, now=0.6)  # 10/10 -> busy
+    ops = sw.tick(now=0.7)
+    assert any(o.kind is SwapKind.SWAP_OUT for o in ops)
+    assert mgr.hbm_usage() <= sw.config.upper_threshold
+    mgr.check_invariants()
+
+
+def test_queueing_when_everything_pinned():
+    mgr, _ = mgr_pair(hbm_blocks=4, host_blocks=16)
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    lk = mgr.lookup("l1", (), now=1.0)
+    adm = mgr.admit(lk, now=1.0)
+    blocks = mgr.allocate_running("q0", 3 * BS, now=1.0)
+    assert blocks is not None  # 1 lora + 3 kv = all 4 blocks
+    more = mgr.allocate_running("q1", BS, now=1.1)
+    assert more is None  # nothing evictable: lora pinned, no cache nodes
+    assert mgr.stats.queue_events == 1
+
+
+def test_drop_when_host_full():
+    mgr, sw = mgr_pair(hbm_blocks=8, host_blocks=1)
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=6 * BS)
+    mgr.allocate_running("qX", BS, now=1.5)  # 8/8 busy
+    ops = sw.tick(now=2.0)
+    assert any(o.kind is SwapKind.DROP for o in ops)
+    mgr.check_invariants()
+
+
+def test_hit_rate_stats():
+    mgr, _ = mgr_pair()
+    mgr.register_lora("l1", BLOCK_BYTES, now=0.0)
+    _, node = run_query(mgr, "q0", "l1", (), now=1.0, new_tokens=8)
+    hist = node.path_tokens()
+    mgr.lookup("l1", hist, now=2.0)
+    s = mgr.stats
+    assert s.kv_hit_rate() == pytest.approx(1.0)  # 8/8 history tokens hit
+    assert 0.0 < s.lora_hit_rate() <= 1.0

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) for FASTLIBRA system invariants.
+
+Invariants under arbitrary workloads:
+  I1  validity: HBM node ⇒ parent HBM (zero invalid KVs) for FastLibra
+  I2  block-pool conservation: free + allocated == total, no double-booking
+  I3  radix property: sibling edges never share an align-chunk prefix
+  I4  matched tokens are always a prefix of the query and align-quantized
+  I5  byte accounting: Σ node bytes are preserved across splits
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    DependencyTree,
+    NodeKind,
+    Residency,
+    make_fastlibra,
+)
+
+KVB = 64
+BS = 4
+BLOCK_BYTES = KVB * BS
+
+tokens_st = st.lists(st.integers(0, 7), min_size=0, max_size=24).map(tuple)
+lora_st = st.sampled_from(["a", "b", "c"])
+
+
+@given(st.lists(st.tuples(lora_st, tokens_st), min_size=1, max_size=30))
+@settings(max_examples=200, deadline=None)
+def test_tree_properties(inserts):
+    t = DependencyTree(align=1, decay_tau=0.0)
+    for lid in "abc":
+        t.add_lora(lid, 10, 1, tier=Residency.HBM)
+    stored: dict[str, set[tuple]] = {"a": set(), "b": set(), "c": set()}
+    for lid, toks in inserts:
+        if not toks:
+            continue
+        m = t.match(lid, toks, now=1.0)
+        # I4: match result is a true prefix
+        assert m.matched_tokens <= len(toks)
+        path = m.last_node.path_tokens()
+        assert path == toks[: m.matched_tokens]
+        suffix = toks[m.matched_tokens :]
+        if suffix:
+            t.insert_kv(m.last_node, suffix, len(suffix) * KVB, 1, Residency.HBM, 1.0)
+        stored[lid].add(toks)
+    # I5: tree bytes == union-of-prefixes bytes per lora branch
+    for lid, seqs in stored.items():
+        prefix_tokens = set()
+        for s in seqs:
+            for i in range(1, len(s) + 1):
+                prefix_tokens.add(s[:i])
+        lnode = t.lora_node(lid)
+        tree_bytes = _subtree_bytes(lnode)
+        assert tree_bytes == len(prefix_tokens) * KVB
+        # I3: sibling edges diverge on the first token
+        _check_radix(lnode)
+        # every stored sequence must now fully match
+        for s in seqs:
+            m = t.match(lid, s, now=2.0)
+            assert m.matched_tokens == len(s)
+    t.check_validity_invariant()
+
+
+def _subtree_bytes(node):
+    out = 0
+    stack = list(node.children.values())
+    while stack:
+        n = stack.pop()
+        out += n.size_bytes
+        stack.extend(n.children.values())
+    return out
+
+
+def _check_radix(node):
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        firsts = [c.tokens[0] for c in n.children.values() if c.tokens]
+        assert len(firsts) == len(set(firsts)), "sibling edges share a first token"
+        stack.extend(n.children.values())
+
+
+op_st = st.one_of(
+    st.tuples(st.just("query"), lora_st, tokens_st, st.integers(1, 20)),
+    st.tuples(st.just("tick"), st.floats(0.1, 5.0)),
+)
+
+
+@given(st.lists(op_st, min_size=1, max_size=40), st.integers(8, 32))
+@settings(max_examples=100, deadline=None)
+def test_manager_invariants_under_workload(ops, hbm_blocks):
+    mgr, sw = make_fastlibra(
+        hbm_bytes=hbm_blocks * BLOCK_BYTES,
+        host_bytes=128 * BLOCK_BYTES,
+        kv_bytes_per_token=KVB,
+        block_size=BS,
+    )
+    for lid in "abc":
+        mgr.register_lora(lid, BLOCK_BYTES, now=0.0)
+    now = 1.0
+    qid = 0
+    for op in ops:
+        now += 0.05
+        if op[0] == "query":
+            _, lid, toks, new_toks = op
+            lk = mgr.lookup(lid, toks, now)
+            adm = mgr.admit(lk, now)
+            if adm.queued:
+                continue
+            need = len(toks) - lk.match.matched_tokens + new_toks
+            blocks = mgr.allocate_running(f"q{qid}", need, now)
+            if blocks is None:
+                mgr.abort_running(f"q{qid}")
+                mgr.unpin(adm.pinned)
+                qid += 1
+                continue
+            full = tuple(toks) + tuple(range(100 + qid, 100 + qid + new_toks))
+            mgr.commit(f"q{qid}", lk, full, now)
+            mgr.unpin(adm.pinned)
+            qid += 1
+        else:
+            sw.observe_batch_size(2.0)
+            sw.tick(now + op[1])
+        # I1 + I2 after every operation
+        mgr.check_invariants()
+    # no pins should remain
+    for n in mgr.tree.iter_nodes():
+        assert n.ref_count == 0
+    assert mgr.invalid_kv_fraction() == 0.0

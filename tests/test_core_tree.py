@@ -1,0 +1,153 @@
+"""Unit tests for the usage-dependency tree (FASTLIBRA §4)."""
+
+import pytest
+
+from repro.core import DependencyTree, NodeKind, Residency
+
+
+def make_tree(align=1):
+    t = DependencyTree(align=align, decay_tau=0.0)
+    t.add_lora("l1", size_bytes=100, num_blocks=1, tier=Residency.HBM)
+    t.add_lora("l2", size_bytes=100, num_blocks=1, tier=Residency.HOST)
+    return t
+
+
+def test_lora_layer_two():
+    t = make_tree()
+    for n in t.lora_nodes():
+        assert n.parent is t.root
+        assert n.kind is NodeKind.LORA
+
+
+def test_match_empty_tree():
+    t = make_tree()
+    m = t.match("l1", (1, 2, 3), now=1.0)
+    assert m.lora_node is t.lora_node("l1")
+    assert m.matched_tokens == 0
+    assert m.kv_nodes == []
+    assert m.last_node is t.lora_node("l1")
+
+
+def test_match_unknown_lora():
+    t = make_tree()
+    m = t.match("nope", (1, 2), now=0.0)
+    assert m.lora_node is None and m.matched_tokens == 0
+
+
+def test_insert_and_match_chain():
+    t = make_tree()
+    l1 = t.lora_node("l1")
+    a = t.insert_kv(l1, (1, 2, 3, 4), 40, 1, Residency.HBM, now=0.0)
+    b = t.insert_kv(a, (5, 6), 20, 1, Residency.HBM, now=0.0)
+    m = t.match("l1", (1, 2, 3, 4, 5, 6, 7), now=1.0)
+    assert m.matched_tokens == 6
+    assert m.kv_nodes == [a, b]
+    assert m.last_node is b
+
+
+def test_radix_split_on_divergence():
+    t = make_tree()
+    l1 = t.lora_node("l1")
+    t.insert_kv(l1, (1, 2, 3, 4), 40, 4, Residency.HBM, now=0.0)
+    n2 = t.insert_kv(l1, (1, 2, 9, 9), 40, 4, Residency.HBM, now=0.0)
+    # the shared (1,2) prefix must have been factored out
+    m = t.match("l1", (1, 2, 9, 9), now=1.0)
+    assert m.matched_tokens == 4
+    assert m.kv_nodes[-1] is n2
+    assert m.kv_nodes[0].tokens == (1, 2)
+    m2 = t.match("l1", (1, 2, 3, 4), now=1.0)
+    assert m2.matched_tokens == 4
+    assert m2.kv_nodes[0] is m.kv_nodes[0]
+
+
+def test_split_preserves_size_bytes():
+    t = make_tree()
+    l1 = t.lora_node("l1")
+    t.insert_kv(l1, (1, 2, 3, 4), 40, 4, Residency.HBM, now=0.0)
+    t.insert_kv(l1, (1, 2, 9), 30, 3, Residency.HBM, now=0.0)
+    total = sum(n.size_bytes for n in t.iter_nodes({NodeKind.KV}))
+    # 40 split into 20+20, plus 10 for the (9,) suffix
+    assert total == 50
+
+
+def test_branches_are_independent_per_lora():
+    t = make_tree()
+    t.insert_kv(t.lora_node("l1"), (1, 2), 20, 1, Residency.HBM, now=0.0)
+    m = t.match("l2", (1, 2), now=1.0)
+    assert m.matched_tokens == 0
+
+
+def test_align_quantizes_match():
+    t = DependencyTree(align=4, decay_tau=0.0)
+    t.add_lora("l1", 100, 1, tier=Residency.HBM)
+    l1 = t.lora_node("l1")
+    t.insert_kv(l1, (1, 2, 3, 4), 40, 1, Residency.HBM, now=0.0)
+    # 6 usable tokens quantize down to 4
+    m = t.match("l1", (1, 2, 3, 4, 5, 6), now=1.0)
+    assert m.matched_tokens == 4
+
+
+def test_hbm_leaves_and_host_roots():
+    t = make_tree()
+    l1 = t.lora_node("l1")
+    a = t.insert_kv(l1, (1,), 10, 1, Residency.HBM, now=0.0)
+    b = t.insert_kv(a, (2,), 10, 1, Residency.HOST, now=0.0)
+    c = t.insert_kv(b, (3,), 10, 1, Residency.HOST, now=0.0)
+    leaves = t.hbm_leaves()
+    assert a in leaves  # a's only child is HOST-resident
+    assert t.lora_node("l1") not in leaves  # has HBM child a
+    roots = t.host_roots()
+    assert b in roots and c not in roots  # c's parent is host
+    assert t.lora_node("l2") in roots  # host LoRA under (virtual) root
+
+
+def test_pinned_not_a_leaf_candidate():
+    t = make_tree()
+    a = t.insert_kv(t.lora_node("l1"), (1,), 10, 1, Residency.HBM, now=0.0)
+    a.ref_count = 1
+    assert a not in t.hbm_leaves()
+
+
+def test_validity_invariant_detects_violation():
+    t = make_tree()
+    l2 = t.lora_node("l2")  # HOST
+    kv = t.insert_kv(l2, (1,), 10, 1, Residency.HBM, now=0.0)
+    with pytest.raises(AssertionError):
+        t.check_validity_invariant()
+    assert t.invalid_hbm_bytes() == 10
+    kv.tier = Residency.HOST
+    t.check_validity_invariant()
+    assert t.invalid_hbm_bytes() == 0
+
+
+def test_visit_prob_normalizes():
+    t = DependencyTree(align=1, decay_tau=0.0)
+    t.add_lora("a", 1, 1)
+    t.add_lora("b", 1, 1)
+    for _ in range(3):
+        t.match("a", (), now=1.0)
+    t.match("b", (), now=1.0)
+    pa = t.visit_prob(t.lora_node("a"), now=1.0)
+    pb = t.visit_prob(t.lora_node("b"), now=1.0)
+    assert pa == pytest.approx(0.75)
+    assert pb == pytest.approx(0.25)
+
+
+def test_decay_reduces_old_visits():
+    t = DependencyTree(align=1, decay_tau=10.0)
+    t.add_lora("a", 1, 1)
+    t.match("a", (), now=0.0)
+    n = t.lora_node("a")
+    assert n.decayed_visits(0.0, 10.0) == pytest.approx(1.0)
+    assert n.decayed_visits(100.0, 10.0) < 1e-3
+
+
+def test_remove_leaf():
+    t = make_tree()
+    a = t.insert_kv(t.lora_node("l1"), (1,), 10, 1, Residency.HBM, now=0.0)
+    t.remove(a)
+    assert t.match("l1", (1,), now=1.0).matched_tokens == 0
+    with pytest.raises(ValueError):
+        b = t.insert_kv(t.lora_node("l1"), (1, 2), 10, 1, Residency.HBM, now=0.0)
+        t.insert_kv(b, (3,), 10, 1, Residency.HBM, now=0.0)
+        t.remove(b)  # has a child

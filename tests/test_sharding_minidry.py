@@ -1,0 +1,99 @@
+"""Mini dry-run in CI: lower+compile sharded steps on an 8-device host mesh.
+
+A subprocess sets XLA_FLAGS=--xla_force_host_platform_device_count=8 (the
+main test process must keep its single device) and lowers a reduced arch per
+family on a (4, 2) mesh — validating the sharding rules end-to-end without
+the 512-way production sweep.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.distributed.sharding import (
+    batch_specs, cache_specs, make_shardings, moment_specs, param_specs,
+)
+from repro.models import (
+    build_model, make_decode_step, make_train_state, make_train_step,
+)
+from repro.models.model import TrainState
+
+arch = sys_arch = %r
+cfg = configs.reduced(configs.get(arch))
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+model = build_model(cfg, dtype=jnp.float32)
+out = {}
+with mesh:
+    # ---- train step
+    ts = jax.eval_shape(lambda k: make_train_state(model, k, n_lora_slots=2),
+                        jax.random.PRNGKey(0))
+    spec = TrainState(
+        params=param_specs(ts.params, mesh),
+        lora=param_specs(ts.lora, mesh),
+        opt=type(ts.opt)(m=moment_specs(ts.opt.m, mesh),
+                         v=moment_specs(ts.opt.v, mesh),
+                         step=jax.sharding.PartitionSpec()),
+        step=jax.sharding.PartitionSpec(),
+    )
+    sh = make_shardings(spec, mesh)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+        "adapter_ids": jax.ShapeDtypeStruct((8,), jnp.int32),
+    }
+    if cfg.is_encdec:
+        batch["frames"] = jax.ShapeDtypeStruct((8, 4, cfg.d_model), jnp.float32)
+    bsh = make_shardings(batch_specs(batch, mesh), mesh)
+    step = make_train_step(model)
+    compiled = jax.jit(step, in_shardings=(sh, bsh)).lower(ts, batch).compile()
+    out["train_flops"] = (compiled.cost_analysis() or {}).get("flops", 0)
+    # ---- decode step
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    lora = jax.eval_shape(lambda k: model.init_lora(k, 2), jax.random.PRNGKey(0))
+    if cfg.is_encdec:
+        cache = jax.eval_shape(lambda: model.init_cache(8, 32, src_len=8))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(8, 32))
+    dbatch = {
+        "tokens": jax.ShapeDtypeStruct((8, 1), jnp.int32),
+        "adapter_ids": jax.ShapeDtypeStruct((8,), jnp.int32),
+    }
+    psh = make_shardings(param_specs(params, mesh), mesh)
+    lsh = make_shardings(param_specs(lora, mesh), mesh)
+    csh = make_shardings(cache_specs(cache, mesh), mesh)
+    dbsh = make_shardings(batch_specs(dbatch, mesh), mesh)
+    dstep = make_decode_step(model)
+    compiled = jax.jit(dstep, in_shardings=(psh, lsh, csh, dbsh)).lower(
+        params, lora, cache, dbatch).compile()
+    out["decode_ok"] = True
+print("RESULT:" + json.dumps(out))
+"""
+
+FAMILIES = ["qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-1.6b",
+            "recurrentgemma-2b", "seamless-m4t-large-v2"]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_sharded_lower_compile_8dev(arch):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", "import sys\n" + SCRIPT % arch],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout[-2000:]
+    res = json.loads(line[0][len("RESULT:"):])
+    assert res.get("decode_ok") and res.get("train_flops", 0) > 0
