@@ -55,3 +55,8 @@ def run(out: CsvOut) -> None:
             out.emit(f"fig11/summary/peak_vs_{base}",
                      peaks["fastlibra"] / peaks[base],
                      "paper=1.7x_vllm/1.6x_slora")
+    # engine-level TTFT cross-check (real JAX execution on the reduced
+    # arch): the bucketed prefill subsystem vs the eager seed path
+    from . import prefill_bench
+
+    prefill_bench.run(out, prefix="fig11/engine_prefill")

@@ -28,6 +28,7 @@ MODULES = [
     ("fig15", "benchmarks.fig15_ablations"),
     ("fig16", "benchmarks.fig16_many_lora"),
     ("overhead", "benchmarks.overhead"),
+    ("prefill", "benchmarks.prefill_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -41,6 +41,7 @@ from repro.distributed.sharding import (
     moment_specs,
     param_specs,
 )
+from repro.launch.costs import cost_dict
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import batch_specs_for, model_flops, model_state_specs
 from repro.models import make_decode_step, make_prefill_step, make_train_step
@@ -201,7 +202,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, verbose: bool = True,
         t1 = time.time()
         compiled = lowered.compile()
         rec["compile_s"] = time.time() - t1
-        ca = compiled.cost_analysis() or {}
+        ca = cost_dict(compiled)
         flops_dev = float(ca.get("flops", 0.0))
         bytes_dev = float(ca.get("bytes accessed", 0.0))
         rec["flops_per_device"] = flops_dev
@@ -230,7 +231,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, verbose: bool = True,
         )
         if verbose:
             print(compiled.memory_analysis())  # proves the cell fits
-            print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+            print({k: v for k, v in cost_dict(compiled).items()
                    if k in ("flops", "bytes accessed", "transcendentals")})
             print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
                   f"compile={rec['compile_s']:.1f}s "

@@ -253,6 +253,7 @@ def gqa_cached(
     mrope_positions=None,
     cache_k_scale: Array | None = None,  # (B, T, Hkv) — int8-KV mode
     cache_v_scale: Array | None = None,
+    token_mask: Array | None = None,  # (B, S) bool — row-masked batch prefill
 ) -> tuple[Array, tuple]:
     """Suffix attention against a KV cache (decode S=1, or chunked prefill).
 
@@ -261,6 +262,10 @@ def gqa_cached(
     position-validity mask. With scale arrays present the cache is int8
     (§Perf: halves the decode memory-roofline vs bf16; dequant fuses into
     the attention dot so HBM traffic is the int8 payload).
+    With ``token_mask`` (bucketed batch prefill: per-row suffixes padded to
+    a shared length), masked positions keep the cache's existing contents —
+    required for ring-indexed windows where a padded write would wrap onto
+    live slots, and for rows that only ride along in the batch.
     Returns (out, updated cache arrays — (k, v) or (k, v, ks, vs)).
     """
     B, S, _ = x.shape
@@ -270,35 +275,57 @@ def gqa_cached(
     q, k, v = _qkv(p, x, cfg, positions, lora, adapter_ids, lora_scale,
                    mrope_positions)
     if window > 0 and T == window:
+        if token_mask is not None and S > window:
+            # a padded chunk wider than the ring would scatter pad slots onto
+            # this chunk's own real writes (duplicate indices, unspecified
+            # winner) — callers must chunk to <= window first
+            raise ValueError(
+                f"row-masked chunk of {S} tokens exceeds ring window {window}")
         slots = positions % window
     else:
         slots = positions
     # scatter the new rows into the cache (per batch row)
-    def write(c, new, slot):
-        return c.at[slot].set(new)
+    if token_mask is None:
+        def write(c, new, slot):
+            return c.at[slot].set(new)
+
+        wmap = jax.vmap(write)
+    else:
+        def write(c, new, slot, m):
+            keep = m.reshape((-1,) + (1,) * (new.ndim - 1))
+            return c.at[slot].set(jnp.where(keep, new, c[slot]))
+
+        wmap = lambda c, new, slot: jax.vmap(write)(c, new, slot, token_mask)
 
     if quant:
         kq, ks = quantize_kv_rows(k)
         vq, vs = quantize_kv_rows(v)
-        cache_k = jax.vmap(write)(cache_k, kq, slots)
-        cache_v = jax.vmap(write)(cache_v, vq, slots)
-        cache_k_scale = jax.vmap(write)(cache_k_scale, ks, slots)
-        cache_v_scale = jax.vmap(write)(cache_v_scale, vs, slots)
+        cache_k = wmap(cache_k, kq, slots)
+        cache_v = wmap(cache_v, vq, slots)
+        cache_k_scale = wmap(cache_k_scale, ks, slots)
+        cache_v_scale = wmap(cache_v_scale, vs, slots)
         k_eff = cache_k.astype(x.dtype) * cache_k_scale[..., None].astype(x.dtype)
         v_eff = cache_v.astype(x.dtype) * cache_v_scale[..., None].astype(x.dtype)
     else:
-        cache_k = jax.vmap(write)(cache_k, k, slots)
-        cache_v = jax.vmap(write)(cache_v, v, slots)
+        cache_k = wmap(cache_k, k, slots)
+        cache_v = wmap(cache_v, v, slots)
         k_eff, v_eff = cache_k, cache_v
-    # absolute position of every cache slot, for masking
+    # absolute position of every cache slot, for masking. Under token_mask
+    # the chunk's trailing positions are pads that wrote nothing: the ring
+    # labeling and the validity frontier must anchor on each row's last REAL
+    # position, or pad slots would shadow live window keys.
+    if token_mask is None:
+        last = positions[:, -1:]  # (B,1)
+    else:
+        n_real = token_mask.sum(axis=1)
+        last = (start + jnp.maximum(n_real, 1) - 1)[:, None]
     if window > 0 and T == window:
         # slot j holds absolute position: largest p <= last with p % W == j
-        last = positions[:, -1:]  # (B,1)
         j = jnp.arange(T)[None, :]
         kpos = last - ((last - j) % window)
     else:
         kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
-    valid = jnp.logical_and(kpos <= positions[:, -1:], kpos >= 0)
+    valid = jnp.logical_and(kpos <= last, kpos >= 0)
     if window > 0:
         mask = window_mask(positions, kpos, window)
         mask = jnp.logical_and(mask, valid[:, None, :])
@@ -392,6 +419,7 @@ def mla_cached(
     lora=None,
     adapter_ids=None,
     lora_scale: float = 1.0,
+    token_mask: Array | None = None,  # (B, S) bool — row-masked batch prefill
     **_: object,
 ) -> tuple[Array, tuple[Array, Array]]:
     """Cached MLA decode in the ABSORBED form.
@@ -410,11 +438,20 @@ def mla_cached(
         p, x, cfg, positions, lora, adapter_ids, lora_scale
     )
 
-    def write(c, new, slot):
-        return c.at[slot].set(new)
+    if token_mask is None:
+        def write(c, new, slot):
+            return c.at[slot].set(new)
 
-    cache_latent = jax.vmap(write)(cache_latent, latent_new, positions)
-    cache_krope = jax.vmap(write)(cache_krope, krope_new, positions)
+        cache_latent = jax.vmap(write)(cache_latent, latent_new, positions)
+        cache_krope = jax.vmap(write)(cache_krope, krope_new, positions)
+    else:
+        def write(c, new, slot, m):
+            return c.at[slot].set(jnp.where(m[:, None], new, c[slot]))
+
+        cache_latent = jax.vmap(write)(cache_latent, latent_new, positions,
+                                       token_mask)
+        cache_krope = jax.vmap(write)(cache_krope, krope_new, positions,
+                                      token_mask)
     w_b = p["w_kv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
     w_bk = w_b[..., : m.qk_nope_head_dim]  # (kv_lora, H, nope)
     w_bv = w_b[..., m.qk_nope_head_dim :]  # (kv_lora, H, v)

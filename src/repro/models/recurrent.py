@@ -72,7 +72,17 @@ def rwkv_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
     }
 
 
-def rwkv_time_mix(p, x, state, cfg, lora, adapter_ids, lora_scale):
+def _last_real(x, state_x, token_mask):
+    """Last unmasked token of each row (fallback: carried state) — the
+    token-shift anchor for the next chunk under row-masked batch prefill."""
+    n_real = token_mask.sum(axis=1)  # (B,)
+    idx = jnp.maximum(n_real - 1, 0)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0, :]
+    return jnp.where((n_real > 0)[:, None], last, state_x)
+
+
+def rwkv_time_mix(p, x, state, cfg, lora, adapter_ids, lora_scale,
+                  token_mask=None):
     r = cfg.rwkv
     B, S, d = x.shape
     H, N = d // r.head_dim, r.head_dim
@@ -93,13 +103,17 @@ def rwkv_time_mix(p, x, state, cfg, lora, adapter_ids, lora_scale):
     u = p["u"].astype(jnp.float32)
 
     def step(S_state, inputs):
-        r_t, k_t, v_t, w_t = inputs  # each (B,H,N) / decay (B,H,N)
+        r_t, k_t, v_t, w_t, m_t = inputs  # each (B,H,N) / decay (B,H,N)
         kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,N,N)
         y = jnp.einsum("bhn,bhnm->bhm", r_t, S_state + u[None, :, :, None] * kv)
         S_new = w_t[..., :, None] * S_state + kv
+        if m_t is not None:  # masked (pad) steps leave the wkv state intact
+            S_new = jnp.where(m_t[:, None, None, None], S_new, S_state)
         return S_new, y
 
     xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rr, kk, vv, w))  # (S,B,H,N)
+    xs = xs + ((jnp.moveaxis(token_mask, 1, 0),)
+               if token_mask is not None else (None,))
     S_final, ys = jax.lax.scan(step, state["wkv"], xs)
     y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)  # (B,S,d)
     # per-head group norm
@@ -108,18 +122,21 @@ def rwkv_time_mix(p, x, state, cfg, lora, adapter_ids, lora_scale):
     y = y.reshape(B, S, d) * (1.0 + p["ln_x"].astype(jnp.float32))
     y = (y * gg.astype(jnp.float32)).astype(x.dtype)
     out = _proj(y, p["wo"], lora, "o", adapter_ids, lora_scale)
-    new_state = {"tm_x": x[:, -1, :], "wkv": S_final, "cm_x": state["cm_x"]}
+    tm_x = (x[:, -1, :] if token_mask is None
+            else _last_real(x, state["tm_x"], token_mask))
+    new_state = {"tm_x": tm_x, "wkv": S_final, "cm_x": state["cm_x"]}
     return out, new_state
 
 
-def rwkv_channel_mix(p, x, state, cfg):
+def rwkv_channel_mix(p, x, state, cfg, token_mask=None):
     xprev = jnp.concatenate([state["cm_x"][:, None, :], x[:, :-1, :]], axis=1)
     xk = x + (xprev - x) * p["mu_ck"]
     xr = x + (xprev - x) * p["mu_cr"]
     k = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
     out = jax.nn.sigmoid(xr @ p["w_cr"]) * (k @ p["w_cv"])
     new_state = dict(state)
-    new_state["cm_x"] = x[:, -1, :]
+    new_state["cm_x"] = (x[:, -1, :] if token_mask is None
+                         else _last_real(x, state["cm_x"], token_mask))
     return out, new_state
 
 
@@ -153,16 +170,28 @@ def rglru_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
     }
 
 
-def _causal_depthwise_conv(x: Array, w: Array, b: Array, carry: Array):
-    """x: (B,S,W); w: (cw,W) depthwise; carry: (B,cw-1,W) previous inputs."""
+def _causal_depthwise_conv(x: Array, w: Array, b: Array, carry: Array,
+                           token_mask: Array | None = None):
+    """x: (B,S,W); w: (cw,W) depthwise; carry: (B,cw-1,W) previous inputs.
+
+    With ``token_mask``, the new carry is the conv window ending at each
+    row's last real token (pads are trailing junk that must not leak into
+    the next chunk's receptive field)."""
     cw = w.shape[0]
     xx = jnp.concatenate([carry, x], axis=1)  # (B, S+cw-1, W)
     out = sum(xx[:, i : i + x.shape[1], :] * w[i] for i in range(cw)) + b
-    new_carry = xx[:, -(cw - 1) :, :] if cw > 1 else carry
-    return out, new_carry
+    if cw <= 1:
+        return out, carry
+    if token_mask is None:
+        return out, xx[:, -(cw - 1) :, :]
+    # xx index j holds the input at position j-(cw-1); the window feeding the
+    # step after the last real token (n_real-1) is xx[n_real .. n_real+cw-2]
+    n_real = token_mask.sum(axis=1)  # (B,)
+    idx = n_real[:, None] + jnp.arange(cw - 1)[None, :]
+    return out, jnp.take_along_axis(xx, idx[:, :, None], axis=1)
 
 
-def rglru_block(p, x, state, cfg: ModelConfig):
+def rglru_block(p, x, state, cfg: ModelConfig, token_mask=None):
     """Griffin recurrent block: (gelu gate) ⊙ RG-LRU(conv1d(W_in x)) → W_out.
 
     Uses an associative scan over time (parallel prefill) for the linear
@@ -172,7 +201,8 @@ def rglru_block(p, x, state, cfg: ModelConfig):
     B, S, _ = x.shape
     gate = jax.nn.gelu(x @ p["w_gel"])
     u = x @ p["w_in"]
-    u, conv_carry = _causal_depthwise_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    u, conv_carry = _causal_depthwise_conv(u, p["conv_w"], p["conv_b"],
+                                           state["conv"], token_mask)
     r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"]).astype(jnp.float32)
     i = jax.nn.sigmoid(u @ p["w_i"] + p["b_i"]).astype(jnp.float32)
     log_a_base = -jax.nn.softplus(-p["lam"].astype(jnp.float32))  # log σ(Λ) < 0
@@ -181,6 +211,10 @@ def rglru_block(p, x, state, cfg: ModelConfig):
     b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * (
         i * u.astype(jnp.float32)
     )
+    if token_mask is not None:  # pad steps: identity recurrence (a=1, b=0)
+        m3 = token_mask[:, :, None]
+        a = jnp.where(m3, a, 1.0)
+        b = jnp.where(m3, b, 0.0)
     # prepend carried state as a pseudo-step: h_0 via (a=1 on carry trick)
     a_all = jnp.concatenate([jnp.ones((B, 1, a.shape[-1]), a.dtype), a], axis=1)
     b_all = jnp.concatenate([state["h"][:, None, :], b], axis=1)

@@ -264,23 +264,26 @@ class LM:
         return x, aux, (kv if kv_out else None)
 
     def _layer_cached(self, lp, lora_slice, lcache, x, start, adapter_ids,
-                      mrope_positions):
+                      mrope_positions, token_mask=None):
         """One layer against a cache (decode / chunked prefill)."""
         cfg = self.cfg
         h = rms_norm(x, lp["norm1"], cfg.norm_eps)
         if cfg.rwkv is not None:
             st = {k: lcache[k] for k in ("tm_x", "wkv", "cm_x")}
             mixed, st = rwkv_time_mix(lp["mixer"], h, st, cfg, lora_slice,
-                                      adapter_ids, self.lora_scale)
+                                      adapter_ids, self.lora_scale,
+                                      token_mask=token_mask)
             x = x + mixed
             h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
-            out, st = rwkv_channel_mix(lp["mixer"], h2, st, cfg)
+            out, st = rwkv_channel_mix(lp["mixer"], h2, st, cfg,
+                                       token_mask=token_mask)
             x = x + out
             return x, st
         if cfg.mla is not None:
             mixed, (cl, ck) = mla_cached(
                 lp["mixer"], h, start, lcache["latent"], lcache["krope"], cfg,
-                lora=lora_slice, adapter_ids=adapter_ids, lora_scale=self.lora_scale)
+                lora=lora_slice, adapter_ids=adapter_ids, lora_scale=self.lora_scale,
+                token_mask=token_mask)
             new_cache = {"latent": cl, "krope": ck}
         else:
             mixed, new_kv = gqa_cached(
@@ -289,7 +292,8 @@ class LM:
                 window=self.cfg.window_size if self.cfg.rglru else 0,
                 mrope_positions=mrope_positions,
                 cache_k_scale=lcache.get("k_scale"),
-                cache_v_scale=lcache.get("v_scale"))
+                cache_v_scale=lcache.get("v_scale"),
+                token_mask=token_mask)
             if len(new_kv) == 4:
                 new_cache = {"k": new_kv[0], "v": new_kv[1],
                              "k_scale": new_kv[2], "v_scale": new_kv[3]}
@@ -426,17 +430,29 @@ class LM:
     # ====================================================== extend / decode
     def extend(self, params, cache, tokens, start, *, lora=None,
                adapter_ids=None, extra_embeds=None, mrope_positions=None,
-               all_logits=False):
+               all_logits=False, true_lens=None):
         """Write ``tokens`` at per-row offsets ``start`` and return logits for
-        the chunk (chunked prefill / decode are the S>1 / S=1 cases)."""
+        the chunk (chunked prefill / decode are the S>1 / S=1 cases).
+
+        ``true_lens`` (B,) enables row-masked batch prefill: row i's first
+        ``true_lens[i]`` tokens are real, the rest pad to a shared (bucketed)
+        shape. Pad positions neither write the cache nor advance recurrent
+        state, and ``len`` advances by ``true_lens`` — so one jit-compiled
+        shape serves every suffix length in the bucket."""
         cfg = self.cfg
         B, S = tokens.shape
         x = self._embed(params, tokens, extra_embeds)
+        token_mask = None
+        new_len = start + S
+        if true_lens is not None:
+            token_mask = jnp.arange(S)[None, :] < true_lens[:, None]
+            new_len = start + true_lens
         if cfg.rglru is not None:
             logits, cache2 = self._hybrid_cached(params, cache, x, start, lora,
                                                  adapter_ids,
-                                                 all_logits=all_logits)
-            cache2["len"] = start + S
+                                                 all_logits=all_logits,
+                                                 token_mask=token_mask)
+            cache2["len"] = new_len
             return logits, cache2
         lora = lora or {}
         clen = cache.pop("len")
@@ -444,12 +460,13 @@ class LM:
         def body(x, xs):
             lp, lsl, lcache = xs
             xx, new_cache = self._layer_cached(lp, lsl, lcache, x, start,
-                                               adapter_ids, mrope_positions)
+                                               adapter_ids, mrope_positions,
+                                               token_mask)
             return xx, new_cache
 
         x, new_cache = self._scan_layers(body, x, (params["layers"], lora, cache))
         cache["len"] = clen  # restore popped key on the input pytree
-        new_cache["len"] = start + S
+        new_cache["len"] = new_len
         out = x if all_logits else x[:, -1:, :]
         return self._unembed(params, out), new_cache
 
@@ -461,7 +478,7 @@ class LM:
                            mrope_positions=mrope_positions)
 
     def _hybrid_cached(self, params, cache, x, start, lora, adapter_ids,
-                       all_logits=False):
+                       all_logits=False, token_mask=None):
         cfg = self.cfg
         types = self._layer_types()
         B, S, _ = x.shape
@@ -474,7 +491,7 @@ class LM:
             if t == "rec":
                 lp = _index(params["rec_layers"], ri)
                 st = {"h": cache["h"][ri], "conv": cache["conv"][ri]}
-                mixed, st = rglru_block(lp, h, st, cfg)
+                mixed, st = rglru_block(lp, h, st, cfg, token_mask=token_mask)
                 new_h.append(st["h"])
                 new_conv.append(st["conv"])
                 ri += 1
@@ -484,7 +501,7 @@ class LM:
                 mixed, (ck, cv) = gqa_cached(
                     lp, h, start, cache["k"][ai], cache["v"][ai], cfg,
                     lora=lsl, adapter_ids=adapter_ids, lora_scale=self.lora_scale,
-                    window=cfg.window_size)
+                    window=cfg.window_size, token_mask=token_mask)
                 new_k.append(ck)
                 new_v.append(cv)
                 ai += 1

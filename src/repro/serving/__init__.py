@@ -2,13 +2,18 @@
 
 from .engine import EngineConfig, ServingEngine
 from .metrics import ServingReport, summarize
+from .prefill import BatchPrefill, PrefillStats, bucket_for, make_buckets
 from .request import Phase, Request
 
 __all__ = [
+    "BatchPrefill",
     "EngineConfig",
     "Phase",
+    "PrefillStats",
     "Request",
     "ServingEngine",
     "ServingReport",
+    "bucket_for",
+    "make_buckets",
     "summarize",
 ]

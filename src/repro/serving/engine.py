@@ -14,6 +14,9 @@ block allocation; this engine is its data plane:
 
 The decode hot loop is one jitted ``model.extend`` over a fixed-slot dense
 cache; adapters batch through the SGMV path via per-row ``adapter_ids``.
+Prefill runs through the bucketed, jit-cached batch subsystem in
+:mod:`repro.serving.prefill` (chunked and interleaved with decode); the
+exact-shape eager path survives as ``prefill_mode="eager"`` for pinning.
 """
 
 from __future__ import annotations
@@ -32,6 +35,7 @@ from ..kvcache import KVPoolSpec, PagedKVPool
 from ..lora import AdapterStore
 from ..models import build_model
 from .metrics import ServingReport, summarize
+from .prefill import BatchPrefill, make_buckets
 from .request import Phase, Request
 
 
@@ -45,6 +49,12 @@ class EngineConfig:
     variant: str = "fastlibra"  # fastlibra|wom|wos|wol|vllm|slora
     eos_token: int = -1  # -1: run to max_new_tokens
     clock: Callable[[], float] = time.monotonic
+    # ---- prefill subsystem (serving/prefill.py)
+    # "bucketed": coalesced, length-bucketed, jit-cached chunked prefill;
+    # "eager": the exact-shape per-request path (correctness pin / ablation)
+    prefill_mode: str = "bucketed"
+    prefill_chunk: int = 64  # max suffix tokens fed per engine step & row
+    prefill_min_bucket: int = 8  # smallest pad-to bucket (powers of two up)
 
 
 class ServingEngine:
@@ -89,6 +99,15 @@ class ServingEngine:
                 params, cache, tokens, cache["len"], lora=lora, adapter_ids=ids
             )
         )
+        chunk = min(config.prefill_chunk, config.max_seq_len)
+        if model_cfg.rglru is not None and model_cfg.window_size:
+            # ring-indexed window caches: a padded chunk wider than the ring
+            # would wrap pad slots onto the chunk's own real writes
+            chunk = min(chunk, model_cfg.window_size)
+        self.prefill = BatchPrefill(
+            self.model, make_buckets(config.prefill_min_bucket, chunk)
+        )
+        self._prefill_chunk = chunk
         self._start_time: Optional[float] = None
         self._batch_sizes: deque[tuple[float, int]] = deque()
 
@@ -123,6 +142,8 @@ class ServingEngine:
             lora_hit_rate=self.manager.stats.lora_hit_rate(),
             invalid_kv_fraction=self.manager.invalid_kv_fraction(),
             hbm_utilization=self.manager.hbm_usage(),
+            avg_prefill_batch=self.prefill.stats.mean_batch,
+            prefill_compiles=self.prefill.compile_count,
         )
 
     def step(self) -> None:
@@ -132,6 +153,7 @@ class ServingEngine:
             self.swapper.tick(now)
             self._execute_swaps(self.manager.drain_ops())
         self._admit_waiting()
+        self._prefill_once()
         self._decode_once()
 
     # ---------------------------------------------------------------- admit
@@ -165,11 +187,13 @@ class ServingEngine:
             req.admit_time = t0
             req.slot = self._free_slots.popleft()
             self._slot_req[req.slot] = req
-            self._prefill(req)
+            self._begin_prefill(req)
 
-    def _prefill(self, req: Request) -> None:
-        """Gather matched prefix into the slot's dense cache rows, then run
-        the suffix through ``model.extend`` (exact shapes, per request)."""
+    def _begin_prefill(self, req: Request) -> None:
+        """Gather the matched prefix into the slot's dense cache rows and
+        stage the suffix for prefill. In bucketed mode the suffix is consumed
+        chunk-by-chunk by :meth:`_prefill_once` (coalesced across requests);
+        eager mode runs the whole suffix immediately at its exact shape."""
         slot = req.slot
         m = req.lookup.match
         prefix_len = m.matched_tokens
@@ -182,8 +206,20 @@ class ServingEngine:
         aid = self.adapters.slot_of(req.adapter_id)
         if aid is None:
             aid = self.adapters.load(req.adapter_id)
-        suffix = jnp.asarray(req.prompt[prefix_len:], jnp.int32)[None, :]
         self._set_len(slot, prefix_len)
+        req.prefill_pos = prefix_len
+        if self.cfg.prefill_mode == "eager":
+            self._prefill_eager(req)
+        else:
+            req.phase = Phase.PREFILLING
+
+    def _prefill_eager(self, req: Request) -> None:
+        """Seed path: one exact-shape ``model.extend`` over the full suffix
+        (one XLA compile per distinct suffix length). Kept as the
+        correctness pin and ablation baseline for the bucketed subsystem."""
+        slot = req.slot
+        prefix_len = req.prefill_pos
+        suffix = jnp.asarray(req.prompt[prefix_len:], jnp.int32)[None, :]
         start = jnp.asarray(self.cache["len"])
         ids = self._adapter_ids()
         single = {k: v for k, v in self.cache.items()}
@@ -193,11 +229,53 @@ class ServingEngine:
         )
         # only this slot's rows advanced meaningfully; fix other rows' len
         self._merge_cache(new_cache, rows=[slot])
+        req.prefill_pos = len(req.prompt)
         req.phase = Phase.DECODE
         tok = int(jnp.argmax(logits[slot, -1]))
         req.generated.append(tok)
         req.first_token_time = self._now()
         self._maybe_finish(req)
+
+    def _prefill_once(self) -> None:
+        """One coalesced, bucketed prefill chunk for every PREFILLING row.
+
+        All rows admitted (or still mid-prompt) this step share a single
+        jitted ``extend`` padded to the smallest bucket covering the largest
+        pending chunk; per-row ``adapter_ids`` batch heterogeneous LoRAs via
+        SGMV. Long prompts advance ``prefill_chunk`` tokens per step and
+        yield to :meth:`_decode_once` in between (chunked prefill)."""
+        rows = [r for r in self._slot_req
+                if r is not None and r.phase is Phase.PREFILLING]
+        if not rows:
+            return
+        B = self.cfg.max_batch_slots
+        chunks = {r.slot: min(len(r.prompt) - r.prefill_pos, self._prefill_chunk)
+                  for r in rows}
+        bucket = self.prefill.bucket_for(max(chunks.values()))
+        tokens = np.zeros((B, bucket), np.int32)
+        true_lens = np.zeros((B,), np.int32)
+        row_mask = np.zeros((B,), bool)
+        for r in rows:
+            c = chunks[r.slot]
+            tokens[r.slot, :c] = r.prompt[r.prefill_pos:r.prefill_pos + c]
+            true_lens[r.slot] = c
+            row_mask[r.slot] = True
+        ids = self._adapter_ids()
+        last_logits, new_cache = self.prefill(
+            self.params, self.adapters.slots, self.cache,
+            jnp.asarray(tokens), jnp.asarray(self.cache["len"]),
+            jnp.asarray(true_lens), jnp.asarray(row_mask), ids,
+        )
+        self.cache = new_cache
+        toks = np.asarray(jnp.argmax(last_logits, axis=-1))
+        for r in rows:
+            r.prefill_pos += chunks[r.slot]
+            r.prefill_chunks += 1
+            if r.prefill_pos >= len(r.prompt):
+                r.phase = Phase.DECODE
+                r.generated.append(int(toks[r.slot]))
+                r.first_token_time = self._now()
+                self._maybe_finish(r)
 
     def _pad_rows(self, row_tokens: jax.Array, slot: int) -> jax.Array:
         """Broadcast a single request's tokens into a full-slot batch."""
@@ -279,37 +357,59 @@ class ServingEngine:
 
     # ------------------------------------------------------------- helpers
     def _adapter_ids(self) -> jax.Array:
+        """Per-row adapter slots for the SGMV path.
+
+        A request whose adapter was evicted mid-flight must NOT silently run
+        through slot 0 (someone else's LoRA): reload it, charging the
+        cold-start to the request. Raises if no slot can be freed."""
         ids = np.zeros((self.cfg.max_batch_slots,), np.int32)
         for r in self._slot_req:
             if r is not None:
                 s = self.adapters.slot_of(r.adapter_id)
-                ids[r.slot] = s if s is not None else 0
+                if s is None:
+                    s = self._reload_adapter(r)
+                ids[r.slot] = s
         return jnp.asarray(ids)
+
+    def _reload_adapter(self, req: Request) -> int:
+        """Reload ``req``'s evicted adapter, evicting an idle resident one
+        (not referenced by any active request) if all slots are taken."""
+        t0 = self._now()
+        try:
+            s = self.adapters.load(req.adapter_id)
+        except RuntimeError:
+            active = {r.adapter_id for r in self._slot_req if r is not None}
+            victim = next(
+                (a for a in self.adapters.resident if a not in active), None)
+            if victim is None:
+                raise  # every slot pinned by an in-flight request
+            self.adapters.unload(victim)
+            s = self.adapters.load(req.adapter_id)
+        req.lora_coldstart += self._now() - t0
+        return s
 
     def _set_len(self, slot: int, value: int) -> None:
         self.cache["len"] = self.cache["len"].at[slot].set(value)
 
     def _merge_cache(self, new_cache: dict, rows: list[int]) -> None:
-        """Adopt updated rows from ``new_cache``; keep other rows unchanged."""
+        """Adopt updated rows from ``new_cache``; keep other rows unchanged.
+
+        Keyed on the cache layout ('len' is (B,), all other leaves are
+        layer-stacked (L, B, ...)) rather than guessing the batch axis from
+        shapes, which breaks when num_layers == max_batch_slots."""
         B = self.cfg.max_batch_slots
         mask = np.zeros((B,), bool)
         for r in rows:
             mask[r] = True
         sel = jnp.asarray(mask)
-
-        def pick(new, old):
-            if new.ndim == 0:
-                return new
-            # row axis: 'len' is (B,); layer-stacked arrays are (L, B, ...)
-            if new.shape[0] == B and new.ndim >= 1:
-                m = sel.reshape((B,) + (1,) * (new.ndim - 1))
-            elif new.ndim >= 2 and new.shape[1] == B:
-                m = sel.reshape((1, B) + (1,) * (new.ndim - 2))
+        merged = {}
+        for key, new in new_cache.items():
+            if key == "len":
+                m = sel
             else:
-                return new
-            return jnp.where(m, new, old)
-
-        self.cache = jax.tree.map(pick, new_cache, self.cache)
+                m = sel.reshape((1, B) + (1,) * (new.ndim - 2))
+            merged[key] = jnp.where(m, new, self.cache[key])
+        self.cache = merged
 
     def _write_dense(self, slot: int, start: int, k, v) -> None:
         """Place gathered prefix KV (L, T, H, D) into the dense cache rows."""

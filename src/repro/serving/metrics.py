@@ -23,6 +23,10 @@ class ServingReport:
     lora_hit_rate: float
     invalid_kv_fraction: float
     hbm_utilization: float
+    # prefill subsystem (serving/prefill.py)
+    p99_queue: float = 0.0
+    avg_prefill_batch: float = 0.0  # requests coalesced per batched prefill
+    prefill_compiles: int = 0  # distinct lowered prefill shapes (≤ #buckets)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -44,6 +48,8 @@ def summarize(
     lora_hit_rate: float = 0.0,
     invalid_kv_fraction: float = 0.0,
     hbm_utilization: float = 0.0,
+    avg_prefill_batch: float = 0.0,
+    prefill_compiles: int = 0,
 ) -> ServingReport:
     reqs = [r for r in finished if r.ttft is not None]
     ttfts = [r.ttft for r in reqs]
@@ -62,4 +68,7 @@ def summarize(
         lora_hit_rate=lora_hit_rate,
         invalid_kv_fraction=invalid_kv_fraction,
         hbm_utilization=hbm_utilization,
+        p99_queue=_p(queues, 0.99),
+        avg_prefill_batch=avg_prefill_batch,
+        prefill_compiles=prefill_compiles,
     )

@@ -9,7 +9,8 @@ from typing import Optional
 
 class Phase(enum.Enum):
     WAITING = "waiting"
-    PREFILL = "prefill"
+    PREFILL = "prefill"  # admitted, prefix gathered, suffix not yet started
+    PREFILLING = "prefilling"  # chunked batch prefill in flight
     DECODE = "decode"
     FINISHED = "finished"
     ABORTED = "aborted"
@@ -37,6 +38,10 @@ class Request:
     slot: int = -1
     lookup: object = None
     pinned: list = dataclasses.field(default_factory=list)
+    # chunked-prefill bookkeeping: absolute position of the next suffix
+    # token to prefill, and how many batched chunks this request rode in
+    prefill_pos: int = 0
+    prefill_chunks: int = 0
 
     @property
     def ttft(self) -> Optional[float]:

@@ -8,6 +8,10 @@ Invariants under arbitrary workloads:
   I5  byte accounting: Σ node bytes are preserved across splits
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

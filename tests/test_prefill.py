@@ -1,0 +1,272 @@
+"""Bucketed batch-prefill subsystem tests.
+
+Three properties pin the new hot path (serving/prefill.py) to the seed
+eager path:
+  P1  bucket math: smallest covering power-of-two bucket, exact at edges
+  P2  logits/token equivalence: row-masked bucketed/chunked prefill computes
+      the same numbers as exact-shape extend, at model AND engine level
+  P3  compile economy: N requests with M distinct suffix lengths lower at
+      most len(buckets) distinct shapes (jit tracing-cache probe)
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import EngineConfig, Phase, Request, ServingEngine
+from repro.serving.prefill import bucket_for, make_buckets
+
+# ----------------------------------------------------------------- P1: math
+
+
+def test_make_buckets_powers_of_two():
+    assert make_buckets(8, 64) == (8, 16, 32, 64)
+    assert make_buckets(4, 4) == (4,)
+    # non-power-of-two chunk is kept as the terminal bucket
+    assert make_buckets(4, 48) == (4, 8, 16, 32, 48)
+    # min > chunk degrades to a single bucket
+    assert make_buckets(64, 16) == (16,)
+
+
+def test_bucket_for_edges():
+    buckets = make_buckets(8, 64)
+    assert bucket_for(0, buckets) == 8
+    assert bucket_for(1, buckets) == 8
+    assert bucket_for(8, buckets) == 8  # exact boundary stays in-bucket
+    assert bucket_for(9, buckets) == 16
+    assert bucket_for(16, buckets) == 16
+    assert bucket_for(17, buckets) == 32
+    assert bucket_for(64, buckets) == 64
+    with pytest.raises(ValueError):
+        bucket_for(65, buckets)
+
+
+# ------------------------------------------------- P2 (model level): masking
+
+ARCHS = ["qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-1.6b",
+         "recurrentgemma-2b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_row_masked_extend_matches_exact(arch):
+    """Padded batched extend (true_lens) must equal per-row exact extend:
+    same last-real-token logits and the same subsequent decode step."""
+    cfg = configs.reduced(configs.get(arch))
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, T, S = 3, 32, 8
+    lens = [5, 3, 7]  # < S: every row is padded
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n) for n in lens]
+
+    # row-masked batched path
+    cache = model.init_cache(B, T)
+    tokens = np.zeros((B, S), np.int32)
+    for i, pr in enumerate(prompts):
+        tokens[i, : len(pr)] = pr
+    true_lens = jnp.asarray(lens, jnp.int32)
+    start = jnp.zeros((B,), jnp.int32)
+    logits, cache = model.extend(params, cache, jnp.asarray(tokens), start,
+                                 all_logits=True, true_lens=true_lens)
+    assert np.asarray(cache["len"]).tolist() == lens
+    masked_last = np.stack([np.asarray(logits[i, n - 1])
+                            for i, n in enumerate(lens)])
+    next_tok = jnp.asarray(
+        [[int(np.argmax(masked_last[i]))] for i in range(B)], jnp.int32)
+    dec_logits, _ = model.decode(params, cache, next_tok)
+    # exact-shape reference, one row at a time
+    for i, pr in enumerate(prompts):
+        ref_cache = model.init_cache(1, T)
+        ref_logits, ref_cache = model.extend(
+            params, ref_cache, jnp.asarray(pr, jnp.int32)[None, :],
+            jnp.zeros((1,), jnp.int32))
+        np.testing.assert_allclose(
+            masked_last[i], np.asarray(ref_logits[0, -1]),
+            rtol=1e-5, atol=1e-5)
+        ref_dec, _ = model.decode(params, ref_cache, next_tok[i][None, :])
+        np.testing.assert_allclose(
+            np.asarray(dec_logits[i, -1]), np.asarray(ref_dec[0, -1]),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_row_masked_extend_on_wrapped_ring_window():
+    """Windowed (ring-indexed) caches: once the ring has wrapped, pad slots
+    must neither overwrite live window keys nor shadow them in the position
+    labeling (the `last real position` anchor in gqa_cached)."""
+    cfg = configs.reduced(configs.get("recurrentgemma-2b"))
+    W = cfg.window_size  # 16 in the reduced config
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    warm = rng.randint(1, cfg.vocab_size, size=W + 5)  # ring wrapped
+    lens = [3, 6]  # second chunk, padded to a shared bucket of 8
+    chunks = [rng.randint(1, cfg.vocab_size, size=n) for n in lens]
+    B, S = 2, 8
+    cache = model.init_cache(B, 64)
+    warm2 = jnp.asarray(np.stack([warm, warm]), jnp.int32)
+    _, cache = model.extend(params, cache, warm2, jnp.zeros((B,), jnp.int32))
+    tokens = np.zeros((B, S), np.int32)
+    for i, ch in enumerate(chunks):
+        tokens[i, : len(ch)] = ch
+    logits, cache = model.extend(
+        params, cache, jnp.asarray(tokens), jnp.asarray(cache["len"]),
+        all_logits=True, true_lens=jnp.asarray(lens, jnp.int32))
+    for i, ch in enumerate(chunks):
+        ref_cache = model.init_cache(1, 64)
+        _, ref_cache = model.extend(params, ref_cache,
+                                    jnp.asarray(warm, jnp.int32)[None, :],
+                                    jnp.zeros((1,), jnp.int32))
+        ref_logits, _ = model.extend(params, ref_cache,
+                                     jnp.asarray(ch, jnp.int32)[None, :],
+                                     jnp.asarray(ref_cache["len"]))
+        np.testing.assert_allclose(
+            np.asarray(logits[i, len(ch) - 1]), np.asarray(ref_logits[0, -1]),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_ring_window_rejects_overwide_masked_chunk():
+    """A padded chunk wider than the ring must be refused, not silently
+    corrupt the window (duplicate scatter indices)."""
+    cfg = configs.reduced(configs.get("recurrentgemma-2b"))
+    W = cfg.window_size
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    cache = model.init_cache(1, 64)
+    with pytest.raises(ValueError, match="ring window"):
+        model.extend(params, cache, jnp.zeros((1, W + 8), jnp.int32),
+                     jnp.zeros((1,), jnp.int32), all_logits=True,
+                     true_lens=jnp.asarray([W + 2], jnp.int32))
+
+
+def test_row_masked_rows_ride_along_untouched():
+    """Rows with true_lens == 0 must keep cache contents and len exactly."""
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, T = 2, 32
+    cache = model.init_cache(B, T)
+    # seed row 1 with some real context first
+    warm = jnp.asarray(np.arange(1, 7)[None, :], jnp.int32)
+    _, cache = model.extend(params, cache, jnp.vstack([warm, warm]),
+                            jnp.zeros((B,), jnp.int32))
+    before_k = np.asarray(cache["k"][:, 1])
+    _, cache = model.extend(
+        params, cache, jnp.zeros((B, 4), jnp.int32), jnp.asarray(cache["len"]),
+        all_logits=True, true_lens=jnp.asarray([4, 0], jnp.int32))
+    assert int(cache["len"][0]) == 10 and int(cache["len"][1]) == 6
+    np.testing.assert_array_equal(before_k, np.asarray(cache["k"][:, 1]))
+
+
+# ---------------------------------------------- P2/P3 (engine level)
+
+_ids = itertools.count()
+
+
+def _req(adapter, prompt, n=4):
+    return Request(f"pf{next(_ids)}", adapter, tuple(prompt), max_new_tokens=n)
+
+
+def _engine(mode, chunk=16, min_bucket=4, slots=4):
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    ecfg = EngineConfig(
+        hbm_bytes=8 << 20, host_bytes=32 << 20, block_size=4,
+        max_batch_slots=slots, max_seq_len=96, prefill_mode=mode,
+        prefill_chunk=chunk, prefill_min_bucket=min_bucket,
+    )
+    eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(7))
+    for i in range(3):
+        eng.register_adapter(f"lora-{i}")
+    return eng
+
+
+def _workload():
+    """Varied suffix lengths (crossing bucket boundaries), multi-LoRA,
+    plus one long prompt that must be chunked."""
+    reqs = [_req(f"lora-{i % 3}", range(30 + i, 38 + i + 3 * i), n=4)
+            for i in range(6)]
+    reqs.append(_req("lora-1", range(100, 150), n=4))
+    return reqs
+
+
+def test_bucketed_matches_eager_end_to_end():
+    outs = {}
+    for mode in ("eager", "bucketed"):
+        eng = _engine(mode)
+        reqs = _workload()
+        for r in reqs:
+            eng.submit(r)
+        rep = eng.run()
+        assert rep.n_finished == len(reqs)
+        outs[mode] = [tuple(r.generated) for r in reqs]
+    assert outs["eager"] == outs["bucketed"], (
+        "bucketed/chunked prefill changed generation")
+
+
+def test_warm_prefix_reuse_under_bucketed_prefill():
+    """FASTLIBRA hit path must stay token-identical under bucketed prefill."""
+    eng = _engine("bucketed")
+    r1 = _req("lora-0", range(10, 26), n=8)
+    eng.submit(r1)
+    eng.run()
+    follow = r1.full_tokens
+    r2 = _req("lora-0", follow, n=4)
+    eng.submit(r2)
+    eng.run()
+    assert r2.matched_tokens > 0
+    cold = _engine("bucketed")
+    r2c = _req("lora-0", follow, n=4)
+    cold.submit(r2c)
+    cold.run()
+    assert tuple(r2.generated) == tuple(r2c.generated)
+
+
+def test_compile_count_bounded_by_buckets():
+    eng = _engine("bucketed")
+    reqs = _workload()  # 7 distinct suffix lengths
+    suffix_lens = {len(r.prompt) for r in reqs}
+    assert len(suffix_lens) >= 5  # the workload really is heterogeneous
+    for r in reqs:
+        eng.submit(r)
+    rep = eng.run()
+    assert rep.n_finished == len(reqs)
+    # jit tracing-cache probe: distinct lowered shapes ≤ number of buckets
+    assert 0 < eng.prefill.compile_count <= len(eng.prefill.buckets)
+    assert rep.prefill_compiles == eng.prefill.compile_count
+    assert rep.avg_prefill_batch >= 1.0
+
+
+def test_requests_coalesce_into_one_prefill_call():
+    """All requests admitted in the same step share ONE batched prefill."""
+    eng = _engine("bucketed", slots=4)
+    reqs = [_req(f"lora-{i % 3}", range(20, 32), n=2) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert eng.prefill.stats.calls == 1
+    assert eng.prefill.stats.rows == 4
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt must not hold the decode loop hostage: short requests
+    keep generating while the long prompt is still prefilling."""
+    eng = _engine("bucketed", chunk=8)
+    short = _req("lora-0", range(10, 20), n=8)
+    eng.submit(short)
+    eng.step()  # short admitted, prefilled (10 ≤ 2 chunks), starts decoding
+    long = _req("lora-1", range(100, 164), n=2)  # 64 tokens = 8 chunks
+    eng.submit(long)
+    interleaved = 0
+    for _ in range(4):
+        before = len(short.generated)
+        eng.step()
+        if long.phase is Phase.PREFILLING and len(short.generated) > before:
+            interleaved += 1
+    assert interleaved > 0, "decode starved during chunked prefill"
+    eng.run()
+    assert long.phase is Phase.FINISHED and short.phase is Phase.FINISHED
+    assert long.prefill_chunks >= 8

@@ -10,7 +10,7 @@ import jax
 import pytest
 
 from repro import configs
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import EngineConfig, Phase, Request, ServingEngine
 
 
 def make_engine(variant="fastlibra", **kw):
@@ -100,6 +100,58 @@ def test_all_variants_serve(variant):
     assert report.n_finished == 4
     if variant == "slora":
         assert report.kv_hit_rate == 0.0  # S-LoRA never reuses history
+
+
+def test_adapter_eviction_mid_decode_reloads():
+    """Evicting a request's adapter mid-decode must reload it (charging the
+    cold-start), NOT silently run the request through LoRA slot 0."""
+    eng = make_engine()
+    r = req("lora-2", range(10, 30), n=6)
+    eng.submit(r)
+    eng.step()
+    eng.step()
+    assert r.phase is Phase.DECODE
+    eng.adapters.unload("lora-2")  # simulate a swapper eviction mid-flight
+    assert eng.adapters.slot_of("lora-2") is None
+    eng.run()
+    assert r.phase is Phase.FINISHED
+    assert eng.adapters.slot_of("lora-2") is not None, "adapter not reloaded"
+    assert r.lora_coldstart > 0, "reload cold-start not charged"
+    # generation must be identical to an uninterrupted run
+    ref_eng = make_engine()
+    ref = req("lora-2", range(10, 30), n=6)
+    ref_eng.submit(ref)
+    ref_eng.run()
+    assert tuple(r.generated) == tuple(ref.generated)
+
+
+def test_adapter_reload_evicts_idle_when_slots_full():
+    """If every LoRA slot is occupied when a reload is needed, an idle
+    resident adapter (not referenced by any active request) is evicted."""
+    eng = make_engine()
+    r = req("lora-2", range(10, 30), n=6)
+    eng.submit(r)
+    eng.step()
+    eng.step()
+    assert r.phase is Phase.DECODE
+    eng.adapters.unload("lora-2")
+    # fill every remaining slot with idle adapters (host-side registration
+    # only, so the manager's swapper doesn't try its own swap-ins for them)
+    i = 0
+    while eng.adapters._free_slots:
+        aid = f"idle-{i}"
+        eng.adapters.register(aid, jax.random.PRNGKey(100 + i))
+        eng.adapters.load(aid)
+        i += 1
+    assert not eng.adapters._free_slots
+    eng.run()
+    assert r.phase is Phase.FINISHED
+    assert eng.adapters.slot_of("lora-2") is not None
+    ref_eng = make_engine()
+    ref = req("lora-2", range(10, 30), n=6)
+    ref_eng.submit(ref)
+    ref_eng.run()
+    assert tuple(r.generated) == tuple(ref.generated)
 
 
 def test_memory_pressure_eviction_and_correctness():

@@ -19,6 +19,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 from repro import configs
+from repro.launch.costs import cost_dict
 from repro.distributed.sharding import (
     batch_specs, cache_specs, make_shardings, moment_specs, param_specs,
 )
@@ -55,7 +56,7 @@ with mesh:
     bsh = make_shardings(batch_specs(batch, mesh), mesh)
     step = make_train_step(model)
     compiled = jax.jit(step, in_shardings=(sh, bsh)).lower(ts, batch).compile()
-    out["train_flops"] = (compiled.cost_analysis() or {}).get("flops", 0)
+    out["train_flops"] = cost_dict(compiled).get("flops", 0)
     # ---- decode step
     params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     lora = jax.eval_shape(lambda k: model.init_lora(k, 2), jax.random.PRNGKey(0))
@@ -82,6 +83,7 @@ FAMILIES = ["qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-1.6b",
             "recurrentgemma-2b", "seamless-m4t-large-v2"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", FAMILIES)
 def test_sharded_lower_compile_8dev(arch):
     env = dict(os.environ)
