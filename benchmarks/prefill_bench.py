@@ -1,12 +1,20 @@
-"""Prefill hot-path benchmark: bucketed vs eager TTFT on a 32-request
-multi-LoRA trace (real JAX execution on the reduced arch).
+"""Prefill/scheduling hot-path benchmark on a 32-request multi-LoRA trace.
 
-The eager seed path compiles one XLA executable per distinct suffix length
-and dispatches one full-batch ``extend`` per admitted request; the bucketed
-subsystem (serving/prefill.py) compiles at most ``len(buckets)`` shapes and
-coalesces same-step admissions into one call. Mean TTFT over the trace is
-the paper's headline metric (Fig. 11); this bench isolates the prefill
-contribution on identical workloads.
+Three-way comparison (real JAX execution on the reduced arch):
+
+* ``mixed``     — Sarathi-style step scheduler (serving/scheduler.py): one
+  row-masked ``extend`` per step packing decode tokens + budgeted prefill
+  chunks (``schedule_mode="mixed"``);
+* ``alternate`` — the PR-2 bucketed subsystem, one prefill call then one
+  decode call per step (ablation pin);
+* ``eager``     — the seed path: one exact-shape compile per distinct
+  suffix length (correctness pin).
+
+Mean TTFT over the trace is the paper's headline metric (Fig. 11); decode
+TPOT p99 is the tail the mixed token budget must keep bounded. A discrete-
+event simulator cross-check runs the same mode split at Llama-7B scale.
+
+CLI: ``PYTHONPATH=src python benchmarks/prefill_bench.py [--quick]``.
 """
 
 from __future__ import annotations
@@ -19,6 +27,8 @@ from repro.serving import EngineConfig, Request, ServingEngine
 N_REQUESTS = 32
 N_LORAS = 8
 
+MODES = ("mixed", "alternate", "eager")
+
 
 def _engine(mode: str):
     import dataclasses
@@ -30,8 +40,14 @@ def _engine(mode: str):
         cfg, lora=dataclasses.replace(cfg.lora, max_adapters=N_LORAS))
     ecfg = EngineConfig(
         hbm_bytes=16 << 20, host_bytes=64 << 20, block_size=4,
-        max_batch_slots=8, max_seq_len=160,
-        prefill_mode=mode, prefill_chunk=64, prefill_min_bucket=8,
+        max_batch_slots=8, max_seq_len=288,
+        prefill_mode="eager" if mode == "eager" else "bucketed",
+        prefill_chunk=64, prefill_min_bucket=8,
+        schedule_mode="mixed" if mode == "mixed" else "alternate",
+        # slots + slots × chunk: the budget admits full-ceiling chunks for
+        # every row even with all slots decoding, so the comparison against
+        # alternate mode isolates the scheduling structure
+        step_token_budget=8 + 8 * 64, target_step_ms=0.0,
     )
     eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(0))
     for i in range(N_LORAS):
@@ -39,43 +55,209 @@ def _engine(mode: str):
     return eng
 
 
-def _trace(seed: int = 0) -> list[Request]:
+def _trace(seed: int = 0, n: int = N_REQUESTS) -> list[Request]:
     """32 requests, zipf-distributed adapters, prompt lengths spanning every
-    bucket (8..96 tokens) — the multi-LoRA many-distinct-lengths regime."""
+    bucket (8..96 tokens) plus genuinely multi-chunk prompts (128–224 =
+    2–4 chunks at the 64-token ceiling), 16-token decodes — the long-prompt
+    multi-LoRA regime continuous chunked-prefill scheduling exists for."""
     rng = np.random.RandomState(seed)
     reqs = []
-    for i in range(N_REQUESTS):
+    for i in range(n):
         adapter = f"lora-{min(rng.zipf(1.5) - 1, N_LORAS - 1)}"
-        plen = int(rng.choice([8, 11, 17, 23, 33, 47, 64, 96]))
+        plen = int(rng.choice([8, 11, 17, 23, 33, 47, 64, 96, 128, 160, 224]))
         prompt = tuple(int(t) for t in rng.randint(1, 900, size=plen))
         reqs.append(Request(f"pb{seed}-{i}", adapter, prompt,
-                            max_new_tokens=4))
+                            max_new_tokens=16))
     return reqs
 
 
 # reports cached per mode: run.py's "prefill" entry and fig11's engine
 # cross-check share one execution per sweep instead of repeating the trace
 _reports: dict = {}
+_seed0_reports: dict = {}  # repeat-0 (seed-0 trace) reports, eager's trace
+_pairs: dict = {}  # n -> [(mixed_rep, alternate_rep)] per repeat (same trace)
+_process_warm = False
 
 
-def _run(mode: str):
-    if mode not in _reports:
-        eng = _engine(mode)
-        for r in _trace():
+def _warm_process() -> None:
+    """One discarded engine run before ANY timed mode: the first minute of
+    JAX work in a fresh process (LLVM JIT, XLA thread pools, allocator
+    arenas) runs several× slower and would be charged to whichever mode
+    happens to go first, deciding the comparison by ordering."""
+    global _process_warm
+    if _process_warm:
+        return
+    _process_warm = True
+    eng = _engine("alternate")
+    for r in _trace(seed=7, n=N_REQUESTS):
+        eng.submit(r)
+    eng.run(max_steps=100_000)
+
+
+REPEATS = 6  # ABBA-interleaved repeats for the mixed-vs-alternate comparison
+
+
+def _warm_engine(mode: str):
+    """Fresh engine with its hot shapes compiled: prompt lengths 96/17/11/8
+    touch every bucket (64/32/16/8) plus the decode shape. Eager still pays
+    per-length compiles for unseen lengths in the timed trace — that compile
+    pathology is exactly what the bucketed modes amortize."""
+    eng = _engine(mode)
+    rng = np.random.RandomState(99)
+    for i, plen in enumerate((96, 17, 11, 8)):
+        prompt = tuple(int(t) for t in rng.randint(1, 900, size=plen))
+        eng.submit(Request(f"warm-{i}", f"lora-{i % N_LORAS}", prompt,
+                           max_new_tokens=4))
+    eng.run(max_steps=100_000)
+    eng.reset_metrics()
+    return eng
+
+
+def _mean_report(reports):
+    """Average the latency/utilization fields across repeats (counts sum)."""
+    import dataclasses as dc
+    import statistics
+
+    first = reports[0]
+    if len(reports) == 1:
+        return first
+    mean = lambda f: statistics.fmean(getattr(r, f) for r in reports)
+    return dc.replace(
+        first,
+        n_finished=sum(r.n_finished for r in reports),
+        avg_ttft=mean("avg_ttft"), p99_ttft=mean("p99_ttft"),
+        avg_tpot=mean("avg_tpot"), p99_tpot=mean("p99_tpot"),
+        p99_queue=mean("p99_queue"), avg_step_ms=mean("avg_step_ms"),
+        budget_utilization=mean("budget_utilization"),
+        prefill_compiles=max(r.prefill_compiles for r in reports),
+    )
+
+
+def _run(mode: str, n: int = N_REQUESTS):
+    """Timed trace(s) for one mode (cached). ``mixed`` and ``alternate``
+    execute INTERLEAVED (m,a,m,a) so slow process warm-up / CPU drift —
+    several× on this container — cancels instead of being charged to
+    whichever mode runs first; their reports average the repeats."""
+    key = (mode, n)
+    if key in _reports:
+        return _reports[key]
+    _warm_process()
+    if mode == "eager":
+        eng = _warm_engine(mode)
+        for r in _trace(n=n):
             eng.submit(r)
-        _reports[mode] = eng.run(max_steps=100_000)
-    return _reports[mode]
+        _reports[key] = eng.run(max_steps=100_000)
+        return _reports[key]
+    engines = {m: _warm_engine(m) for m in ("mixed", "alternate")}
+    collected = {m: [] for m in engines}
+    for rep in range(-1, REPEATS):
+        # ABBA counterbalancing: the process keeps speeding up for a while,
+        # so a fixed (m, a) order would hand the later position — and the
+        # faster clock — to the same mode every repeat. rep -1 is an
+        # unrecorded burn-in pair: the first measured window in a fresh
+        # process is reliably the slowest and always lands on one mode.
+        order = ("mixed", "alternate") if rep % 2 == 0 else ("alternate", "mixed")
+        for m in order:
+            eng = engines[m]
+            # burn-in uses its own seed so measured traces stay prefix-cold
+            for r in _trace(seed=rep if rep >= 0 else 1000, n=n):
+                eng.submit(r)
+            rep_report = eng.run(max_steps=100_000)
+            eng.reset_metrics()
+            if rep >= 0:
+                collected[m].append(rep_report)
+    for m, reps in collected.items():
+        _reports[(m, n)] = _mean_report(reps)
+        _seed0_reports[(m, n)] = reps[0]
+    _pairs[n] = list(zip(collected["mixed"], collected["alternate"]))
+    return _reports[key]
 
 
-def run(out, prefix: str = "prefill") -> None:
-    rep_b = _run("bucketed")
-    rep_e = _run("eager")
-    out.emit(f"{prefix}/bucketed/mean_ttft", rep_b.avg_ttft * 1e6,
-             f"n={rep_b.n_finished};compiles={rep_b.prefill_compiles};"
-             f"batch={rep_b.avg_prefill_batch:.2f};p99_q={rep_b.p99_queue:.3f}")
-    out.emit(f"{prefix}/eager/mean_ttft", rep_e.avg_ttft * 1e6,
-             f"n={rep_e.n_finished};p99_q={rep_e.p99_queue:.3f}")
-    if rep_b.avg_ttft > 0:
-        out.emit(f"{prefix}/summary/ttft_speedup",
-                 rep_e.avg_ttft / rep_b.avg_ttft,
-                 f"eager_over_bucketed;buckets<={rep_b.prefill_compiles}")
+def _paired_ratio(pairs, field) -> float:
+    """Median of per-repeat alternate/mixed ratios.
+
+    Each repeat serves the SAME trace in both modes back-to-back, so the
+    paired ratio cancels the slow CPU-clock drift that an aggregate-mean
+    comparison across disjoint time windows soaks up as noise; the median
+    (not mean) discards the occasional window a GC pause or stray compile
+    lands in, which otherwise swings single pairs by ±15%."""
+    import statistics
+
+    ratios = [getattr(a, field) / getattr(m, field)
+              for m, a in pairs
+              if getattr(m, field) > 0 and getattr(a, field) > 0]
+    return statistics.median(ratios) if ratios else 0.0
+
+
+def _emit_mode(out, prefix: str, mode: str, rep) -> None:
+    out.emit(f"{prefix}/{mode}/mean_ttft", rep.avg_ttft * 1e6,
+             f"n={rep.n_finished};compiles={rep.prefill_compiles};"
+             f"batch={rep.avg_prefill_batch:.2f};p99_q={rep.p99_queue:.3f}")
+    out.emit(f"{prefix}/{mode}/p99_tpot", rep.p99_tpot * 1e6,
+             f"step_ms={rep.avg_step_ms:.2f};"
+             f"budget_util={rep.budget_utilization:.3f}")
+
+
+def run(out, prefix: str = "prefill", n: int = N_REQUESTS) -> None:
+    reps = {mode: _run(mode, n) for mode in MODES}
+    for mode in MODES:
+        _emit_mode(out, prefix, mode, reps[mode])
+    rep_m, rep_a, rep_e = reps["mixed"], reps["alternate"], reps["eager"]
+    # eager runs the seed-0 trace once; compare it against mixed's seed-0
+    # repeat so the ratio is over an identical workload
+    rep_m0 = _seed0_reports.get(("mixed", n), rep_m)
+    if rep_m0.avg_ttft > 0:
+        out.emit(f"{prefix}/summary/ttft_speedup_vs_eager",
+                 rep_e.avg_ttft / rep_m0.avg_ttft,
+                 f"eager_over_mixed;seed0;buckets<={rep_m.prefill_compiles}")
+    pairs = _pairs.get(n, [])
+    if pairs:
+        out.emit(f"{prefix}/summary/ttft_speedup_vs_alternate",
+                 _paired_ratio(pairs, "avg_ttft"),
+                 f"alternate_over_mixed;paired_median;reps={len(pairs)}")
+        ratio = _paired_ratio(pairs, "p99_tpot")
+        out.emit(f"{prefix}/summary/tpot_p99_ratio",
+                 1.0 / ratio if ratio else 0.0,
+                 "mixed_over_alternate;paired_median;target<=1.25")
+
+
+def run_sim_modes(out, prefix: str = "prefill/sim") -> None:
+    """Simulator cross-check: the same mode split at Llama-7B scale."""
+    try:
+        from benchmarks.common import run_sim
+    except ImportError:  # invoked as a script from benchmarks/
+        from common import run_sim
+
+    for mode in ("mixed", "alternate"):
+        res = run_sim("llama-7b", "chatbot", "fastlibra", n_loras=100,
+                      qps=4.0, duration=120.0, schedule_mode=mode,
+                      step_token_budget=256)
+        tpots = sorted(r.tpot for r in res.finished if r.tpot is not None)
+        p99 = tpots[min(len(tpots) - 1, int(0.99 * len(tpots)))] if tpots else 0.0
+        out.emit(f"{prefix}/{mode}/mean_ttft", res.avg_ttft * 1e6,
+                 f"n={len(res.finished)}")
+        out.emit(f"{prefix}/{mode}/p99_tpot", p99 * 1e6, "")
+
+
+def main() -> None:
+    import argparse
+
+    try:
+        from benchmarks.common import CsvOut
+    except ImportError:  # invoked as a script from benchmarks/
+        from common import CsvOut
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="12-request trace, engine comparison only")
+    ap.add_argument("--no-sim", action="store_true",
+                    help="skip the simulator cross-check")
+    args = ap.parse_args()
+    out = CsvOut()
+    run(out, n=12 if args.quick else N_REQUESTS)
+    if not (args.quick or args.no_sim):
+        run_sim_modes(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,7 +61,14 @@ class HardwareModel:
 
 
 def expected_lora_demand(probs: list[float], batch_size: float) -> float:
-    """Eq. 3 — expected number of distinct LoRAs present in a recent batch."""
+    """Eq. 3 — expected number of distinct LoRAs present in a recent batch.
+
+    ``batch_size`` is the engine's unified mixed-batch load: per-step REAL
+    token count (decode rows 1 token, prefill rows their chunk), averaged
+    over the last 5 s. The paper states Eq. 3 over a request count; tokens
+    are the mixed-scheduler generalization — monotone in load, identical
+    when every row is a 1-token decode row — so Low_lora saturates toward
+    the full adapter set exactly when the batch is actually busy."""
     bs = max(0.0, batch_size)
     return sum(1.0 - (1.0 - min(1.0, max(0.0, p))) ** bs for p in probs)
 
@@ -101,8 +108,9 @@ class CostModelScorer:
         self._lora_eval = 1.0
         self._recent_batch_size = 0.0
 
-    # The engine/simulator reports the recent average batch size (last 5 s,
-    # §5.1) before each swapper sweep.
+    # The engine/simulator reports the recent average batch load (last 5 s,
+    # §5.1) before each swapper sweep — the unified mixed-batch token count
+    # under the Sarathi-style scheduler (see expected_lora_demand).
     def observe_batch_size(self, bs: float) -> None:
         self._recent_batch_size = bs
 

@@ -48,7 +48,12 @@ class CacheSwapper:
         self.total_ops = 0
 
     def observe_batch_size(self, bs: float) -> None:
-        """Engine reports the average batch size of the last 5 s (§5.1)."""
+        """Engine reports the recent (last 5 s) average batch load (§5.1).
+
+        With the mixed step scheduler this is the UNIFIED mixed-batch token
+        count per step — decode rows contribute 1 token, prefill rows their
+        chunk slice — one signal instead of a decode-slot count that was
+        blind to the prefill share of each batch."""
         self._recent_batch_size = bs
         obs = getattr(self.manager.scorer, "observe_batch_size", None)
         if obs:

@@ -462,8 +462,17 @@ def mla_cached(
     scores = scores.astype(jnp.float32) / jnp.sqrt(
         jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim)
     )
+    # validity frontier anchors on each row's last REAL position — rows in a
+    # mixed batch have heterogeneous true lengths (a decode row's single
+    # token rides in a chunk-sized bucket), and slots past the frontier hold
+    # unwritten latents that must never enter the softmax
+    if token_mask is None:
+        last = positions[:, -1:]
+    else:
+        n_real = token_mask.sum(axis=1)
+        last = (start + jnp.maximum(n_real, 1) - 1)[:, None]
     kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
-    valid = kpos <= positions[:, -1:]
+    valid = kpos <= last
     mask = causal_mask(positions, kpos, valid)  # (B,S,T)
     scores = jnp.where(mask[:, None, :, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)

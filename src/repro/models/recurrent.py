@@ -74,7 +74,11 @@ def rwkv_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
 
 def _last_real(x, state_x, token_mask):
     """Last unmasked token of each row (fallback: carried state) — the
-    token-shift anchor for the next chunk under row-masked batch prefill."""
+    token-shift anchor for the next chunk under row-masked batch prefill.
+
+    Row lengths are independent, so mixed batches (decode rows with a single
+    real token next to chunk-length prefill rows) anchor correctly per row;
+    pad steps inside the scans are identity updates on the carried state."""
     n_real = token_mask.sum(axis=1)  # (B,)
     idx = jnp.maximum(n_real - 1, 0)
     last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0, :]

@@ -438,7 +438,15 @@ class LM:
         ``true_lens[i]`` tokens are real, the rest pad to a shared (bucketed)
         shape. Pad positions neither write the cache nor advance recurrent
         state, and ``len`` advances by ``true_lens`` — so one jit-compiled
-        shape serves every suffix length in the bucket."""
+        shape serves every suffix length in the bucket.
+
+        Per-row lengths are fully heterogeneous: a single call may mix
+        prefill chunk rows (``true_lens == chunk``) with decode rows
+        (``true_lens == 1``, the row's next token at column 0), which is the
+        primitive the Sarathi-style mixed step scheduler
+        (serving/scheduler.py) is built on. Each row's last-real-position
+        logits are what callers should read (``all_logits=True`` + gather at
+        ``true_lens - 1``)."""
         cfg = self.cfg
         B, S = tokens.shape
         x = self._embed(params, tokens, extra_embeds)

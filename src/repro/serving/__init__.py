@@ -2,8 +2,15 @@
 
 from .engine import EngineConfig, ServingEngine
 from .metrics import ServingReport, summarize
-from .prefill import BatchPrefill, PrefillStats, bucket_for, make_buckets
+from .prefill import (
+    BatchPrefill,
+    PrefillStats,
+    assemble_batch,
+    bucket_for,
+    make_buckets,
+)
 from .request import Phase, Request
+from .scheduler import StepPlan, TokenBudgetController, plan_step
 
 __all__ = [
     "BatchPrefill",
@@ -13,7 +20,11 @@ __all__ = [
     "Request",
     "ServingEngine",
     "ServingReport",
+    "StepPlan",
+    "TokenBudgetController",
+    "assemble_batch",
     "bucket_for",
     "make_buckets",
+    "plan_step",
     "summarize",
 ]

@@ -15,13 +15,21 @@ block allocation; this engine is its data plane:
 The decode hot loop is one jitted ``model.extend`` over a fixed-slot dense
 cache; adapters batch through the SGMV path via per-row ``adapter_ids``.
 Prefill runs through the bucketed, jit-cached batch subsystem in
-:mod:`repro.serving.prefill` (chunked and interleaved with decode); the
-exact-shape eager path survives as ``prefill_mode="eager"`` for pinning.
+:mod:`repro.serving.prefill`; the exact-shape eager path survives as
+``prefill_mode="eager"`` for pinning.
+
+With ``schedule_mode="mixed"`` each engine step is ONE row-masked batched
+``extend``: active decode slots ride as 1-token rows next to prefill chunk
+rows, packed under a per-step token budget that a latency-servoing
+:class:`~repro.serving.scheduler.TokenBudgetController` adapts (Sarathi-
+style continuous chunked prefill). ``schedule_mode="alternate"`` keeps the
+one-prefill-call-then-one-decode-call step as the ablation pin.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Callable, Optional
@@ -35,12 +43,42 @@ from ..kvcache import KVPoolSpec, PagedKVPool
 from ..lora import AdapterStore
 from ..models import build_model
 from .metrics import ServingReport, summarize
-from .prefill import BatchPrefill, make_buckets
+from .prefill import BatchPrefill, assemble_batch, make_buckets
 from .request import Phase, Request
+from .scheduler import TokenBudgetController, plan_step
+
+
+def _default_schedule_mode() -> str:
+    # CI's non-blocking sweep flips the default via env without touching
+    # every test's EngineConfig construction.
+    return os.environ.get("REPRO_SCHEDULE_MODE", "alternate")
 
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Engine knobs.
+
+    Scheduling (serving/scheduler.py):
+
+    * ``schedule_mode`` — ``"mixed"`` composes each engine step as ONE
+      batched ``extend``: every active decode slot contributes 1 token and
+      prefill-phase rows fill the remaining per-step token budget with chunk
+      slices (Sarathi-style continuous chunked prefill). ``"alternate"``
+      keeps the PR-2 behavior — one bucketed-prefill call then one decode
+      call per step — as the ablation pin.
+    * ``step_token_budget`` — upper bound on real tokens per mixed step
+      (decode tokens + prefill chunk tokens). The scheduling knob that
+      replaces the static ``prefill_chunk``, which survives only as the
+      per-row chunk ceiling (and keeps ring-window models safe).
+    * ``target_step_ms`` — when > 0, a :class:`TokenBudgetController`
+      servos the budget against an EMA of measured step wall time so decode
+      TPOT stays bounded under prefill load; <= 0 pins the budget static.
+
+    Prefill (serving/prefill.py): ``prefill_mode="bucketed"`` is the
+    coalesced, length-bucketed, jit-cached chunked path; ``"eager"`` is the
+    exact-shape per-request seed path kept as the correctness pin.
+    """
+
     hbm_bytes: int = 64 << 20  # CPU-test scale; 64 GB on the paper's NPU
     host_bytes: int = 256 << 20
     block_size: int = 16
@@ -55,6 +93,11 @@ class EngineConfig:
     prefill_mode: str = "bucketed"
     prefill_chunk: int = 64  # max suffix tokens fed per engine step & row
     prefill_min_bucket: int = 8  # smallest pad-to bucket (powers of two up)
+    # ---- step scheduler (serving/scheduler.py)
+    schedule_mode: str = dataclasses.field(
+        default_factory=_default_schedule_mode)  # "mixed" | "alternate"
+    step_token_budget: int = 128  # max real tokens per mixed step
+    target_step_ms: float = 0.0  # >0: budget servos to this step latency
 
 
 class ServingEngine:
@@ -65,11 +108,19 @@ class ServingEngine:
         k1, k2 = jax.random.split(key)
         self.model = build_model(model_cfg, dtype=jnp.float32)
         self.params = self.model.init_params(k1)
+        if model_cfg.mla is not None:
+            # the pool stores the compressed latent + rope key as ONE
+            # pseudo-head per token (what _read_dense/_write_dense move),
+            # not the expanded num_kv_heads × head_dim layout
+            m = model_cfg.mla
+            kv_heads, head_dim = 1, m.kv_lora_rank + m.qk_rope_head_dim
+        else:
+            kv_heads, head_dim = model_cfg.num_kv_heads, model_cfg.resolved_head_dim
         spec = KVPoolSpec(
             num_layers=model_cfg.num_layers,
             block_size=config.block_size,
-            kv_heads=model_cfg.num_kv_heads,
-            head_dim=model_cfg.resolved_head_dim,
+            kv_heads=kv_heads,
+            head_dim=head_dim,
             dtype=jnp.float32,
             use_v=model_cfg.mla is None,
         )
@@ -108,8 +159,46 @@ class ServingEngine:
             self.model, make_buckets(config.prefill_min_bucket, chunk)
         )
         self._prefill_chunk = chunk
+        # recurrent layouts (RWKV / RG-LRU hybrid) carry state snapshots, not
+        # a per-token dense KV that the paged pool can gather/scatter — they
+        # serve with cold prefixes (no history-KV reuse) for now.
+        self._kv_reusable = model_cfg.rwkv is None and model_cfg.rglru is None
+        self.budget_ctl = TokenBudgetController(
+            max_budget=max(config.step_token_budget, B + 1),
+            target_step_ms=config.target_step_ms,
+            min_budget=B + 1,  # a full decode batch plus 1 prefill token
+        )
         self._start_time: Optional[float] = None
-        self._batch_sizes: deque[tuple[float, int]] = deque()
+        self._epoch = 0.0  # wall baseline for reports; reset_metrics moves it
+        # unified mixed-batch token counts (5 s window) — the ONE batch-size
+        # signal the swapper/cost model observes (Eq. 3's BS)
+        self._batch_tokens: deque[tuple[float, int]] = deque()
+        self._step_count = 0
+        self._step_ms_sum = 0.0
+        self._budget_used = 0
+        self._budget_avail = 0
+
+    def reset_metrics(self) -> None:
+        """Forget per-request and per-step accounting while keeping jit
+        caches, adapters, and FASTLIBRA cache state warm. Benchmarks call
+        this after a warm-up trace so one-time XLA compile/autotune costs
+        don't pollute the steady-state TTFT/TPOT comparison."""
+        from .prefill import PrefillStats
+
+        self.finished.clear()
+        self.prefill.stats = PrefillStats()
+        self._step_count = 0
+        self._step_ms_sum = 0.0
+        self._budget_used = 0
+        self._budget_avail = 0
+        self._batch_tokens.clear()
+        self.budget_ctl.ema_ms = 0.0
+        self.budget_ctl.steps = 0
+        self.budget_ctl._budget = float(self.budget_ctl.max_budget)
+        # wall-clock baseline for throughput_qps and fresh hit-rate
+        # counters — without these, post-reset reports span the warm-up
+        self._epoch = self._now()
+        self.manager.stats = type(self.manager.stats)()
 
     # ----------------------------------------------------------------- LoRA
     def register_adapter(self, adapter_id: str, key=None) -> None:
@@ -134,7 +223,7 @@ class ServingEngine:
         while (self.waiting or any(self._slot_req)) and steps < max_steps:
             self.step()
             steps += 1
-        wall = self._now()
+        wall = self._now() - self._epoch
         return summarize(
             self.finished,
             wall,
@@ -144,6 +233,10 @@ class ServingEngine:
             hbm_utilization=self.manager.hbm_usage(),
             avg_prefill_batch=self.prefill.stats.mean_batch,
             prefill_compiles=self.prefill.compile_count,
+            avg_step_ms=self._step_ms_sum / max(1, self._step_count),
+            ema_step_ms=self.budget_ctl.ema_ms,
+            budget_utilization=(self._budget_used / self._budget_avail
+                                if self._budget_avail else 0.0),
         )
 
     def step(self) -> None:
@@ -153,8 +246,104 @@ class ServingEngine:
             self.swapper.tick(now)
             self._execute_swaps(self.manager.drain_ops())
         self._admit_waiting()
-        self._prefill_once()
-        self._decode_once()
+        t0 = time.perf_counter()
+        if self.cfg.schedule_mode == "mixed":
+            tokens, planned, budget = self._mixed_step()
+        else:
+            tokens = self._prefill_once() + self._decode_once()
+            planned = budget = 0
+        if tokens == 0:
+            return  # idle step: nothing dispatched, nothing to observe
+        step_ms = (time.perf_counter() - t0) * 1e3
+        self.budget_ctl.observe(step_ms)
+        self._step_count += 1
+        self._step_ms_sum += step_ms
+        if budget > 0:
+            # utilization counts only tokens packed UNDER the budget —
+            # catch-up decode tokens ride outside the plan
+            self._budget_used += planned
+            self._budget_avail += budget
+        self._batch_tokens.append((self._now(), tokens))
+
+    def _mixed_step(self) -> tuple[int, int, int]:
+        """One Sarathi-style step: decode slots + budgeted prefill chunks in
+        a single row-masked ``extend``.
+        Returns (real tokens, budget-planned tokens, budget)."""
+        # admission order, not slot order: under a binding budget the
+        # planner's waterfill favors earlier rows, so the oldest prefill
+        # must come first or slot reuse could starve it
+        prefill_rows = sorted(
+            (r for r in self._slot_req
+             if r is not None and r.phase is Phase.PREFILLING),
+            key=lambda r: r.admit_time)
+        decode_rows = [r for r in self._slot_req
+                       if r is not None and r.phase is Phase.DECODE]
+        if not prefill_rows and not decode_rows:
+            return 0, 0, 0
+        budget = self.budget_ctl.budget
+        plan = plan_step(
+            [r.slot for r in decode_rows],
+            [(r.slot, len(r.prompt) - r.prefill_pos) for r in prefill_rows],
+            budget=budget, chunk_ceiling=self._prefill_chunk)
+        if not plan.prefill_chunks:
+            # pure-decode step: reuse the dedicated S=1 jit instead of
+            # padding every decode token to the smallest prefill bucket
+            n = self._decode_once()
+            return n, n, budget
+        transitioned = self._run_chunks(
+            {r.slot: r for r in prefill_rows}, plan.prefill_chunks,
+            decode_rows)
+        # catch-up decode: rows that completed prefill THIS step get their
+        # second token from one S=1 dispatch, matching the per-request step
+        # cadence of alternate mode (whose separate decode call picks fresh
+        # rows up in the same step) — without it every request pays one
+        # extra engine step at the prefill→decode transition
+        catchup = self._decode_once(transitioned) if transitioned else 0
+        return plan.tokens + catchup, plan.tokens, budget
+
+    def _run_chunks(self, by_slot: dict[int, Request],
+                    chunks: dict[int, int],
+                    decode_rows: list[Request]) -> list[Request]:
+        """Assemble and dispatch ONE row-masked batch: per-slot prefill
+        chunk slices plus (mixed mode) decode rider rows, then advance
+        request state. Shared by the alternate and mixed schedulers so the
+        transition bookkeeping cannot diverge between the two modes.
+        Returns the rows that completed prefill and entered DECODE."""
+        bucket = self.prefill.bucket_for(max(chunks.values()))
+        tokens, true_lens, row_mask = assemble_batch(
+            self.cfg.max_batch_slots, bucket,
+            {s: by_slot[s].prompt[by_slot[s].prefill_pos:
+                                  by_slot[s].prefill_pos + c]
+             for s, c in chunks.items()},
+            {r.slot: r.generated[-1] for r in decode_rows})
+        chunk_mask = np.zeros((self.cfg.max_batch_slots,), bool)
+        for s in chunks:
+            chunk_mask[s] = True
+        ids = self._adapter_ids()
+        last_logits, new_cache = self.prefill(
+            self.params, self.adapters.slots, self.cache,
+            jnp.asarray(tokens), jnp.asarray(self.cache["len"]),
+            jnp.asarray(true_lens), jnp.asarray(row_mask), ids,
+            stat_mask=chunk_mask,
+        )
+        self.cache = new_cache
+        toks = np.asarray(jnp.argmax(last_logits, axis=-1))
+        for r in decode_rows:
+            r.generated.append(int(toks[r.slot]))
+            self._maybe_finish(r)
+        transitioned = []
+        for s, c in chunks.items():
+            r = by_slot[s]
+            r.prefill_pos += c
+            r.prefill_chunks += 1
+            if r.prefill_pos >= len(r.prompt):
+                r.phase = Phase.DECODE
+                r.generated.append(int(toks[r.slot]))
+                r.first_token_time = self._now()
+                self._maybe_finish(r)
+                if r.phase is Phase.DECODE:
+                    transitioned.append(r)
+        return transitioned
 
     # ---------------------------------------------------------------- admit
     def _admit_waiting(self) -> None:
@@ -162,8 +351,11 @@ class ServingEngine:
             req = self.waiting[0]
             now = self._now()
             # match against prompt[:-1]: the last token is always recomputed
-            # so prefill yields logits for it (vLLM semantics).
-            lk = self.manager.lookup(req.adapter_id, req.prompt[:-1], now)
+            # so prefill yields logits for it (vLLM semantics). Recurrent
+            # layouts look up an empty history (cold prefix, LoRA still
+            # tracked) — their state is not pool-gatherable.
+            history = req.prompt[:-1] if self._kv_reusable else ()
+            lk = self.manager.lookup(req.adapter_id, history, now)
             adm = self.manager.admit(lk, now)
             if adm.queued:
                 self._execute_swaps(self.manager.drain_ops())
@@ -236,46 +428,23 @@ class ServingEngine:
         req.first_token_time = self._now()
         self._maybe_finish(req)
 
-    def _prefill_once(self) -> None:
+    def _prefill_once(self) -> int:
         """One coalesced, bucketed prefill chunk for every PREFILLING row.
 
         All rows admitted (or still mid-prompt) this step share a single
         jitted ``extend`` padded to the smallest bucket covering the largest
         pending chunk; per-row ``adapter_ids`` batch heterogeneous LoRAs via
         SGMV. Long prompts advance ``prefill_chunk`` tokens per step and
-        yield to :meth:`_decode_once` in between (chunked prefill)."""
+        yield to :meth:`_decode_once` in between (chunked prefill).
+        Returns the number of real suffix tokens processed."""
         rows = [r for r in self._slot_req
                 if r is not None and r.phase is Phase.PREFILLING]
         if not rows:
-            return
-        B = self.cfg.max_batch_slots
+            return 0
         chunks = {r.slot: min(len(r.prompt) - r.prefill_pos, self._prefill_chunk)
                   for r in rows}
-        bucket = self.prefill.bucket_for(max(chunks.values()))
-        tokens = np.zeros((B, bucket), np.int32)
-        true_lens = np.zeros((B,), np.int32)
-        row_mask = np.zeros((B,), bool)
-        for r in rows:
-            c = chunks[r.slot]
-            tokens[r.slot, :c] = r.prompt[r.prefill_pos:r.prefill_pos + c]
-            true_lens[r.slot] = c
-            row_mask[r.slot] = True
-        ids = self._adapter_ids()
-        last_logits, new_cache = self.prefill(
-            self.params, self.adapters.slots, self.cache,
-            jnp.asarray(tokens), jnp.asarray(self.cache["len"]),
-            jnp.asarray(true_lens), jnp.asarray(row_mask), ids,
-        )
-        self.cache = new_cache
-        toks = np.asarray(jnp.argmax(last_logits, axis=-1))
-        for r in rows:
-            r.prefill_pos += chunks[r.slot]
-            r.prefill_chunks += 1
-            if r.prefill_pos >= len(r.prompt):
-                r.phase = Phase.DECODE
-                r.generated.append(int(toks[r.slot]))
-                r.first_token_time = self._now()
-                self._maybe_finish(r)
+        self._run_chunks({r.slot: r for r in rows}, chunks, [])
+        return sum(chunks.values())
 
     def _pad_rows(self, row_tokens: jax.Array, slot: int) -> jax.Array:
         """Broadcast a single request's tokens into a full-slot batch."""
@@ -285,10 +454,14 @@ class ServingEngine:
         return out.at[slot].set(row_tokens[0])
 
     # --------------------------------------------------------------- decode
-    def _decode_once(self) -> None:
-        active = [r for r in self._slot_req if r is not None and r.phase is Phase.DECODE]
+    def _decode_once(self, rows: Optional[list[Request]] = None) -> int:
+        """One-token decode for every DECODE row (or just ``rows``);
+        returns the number of tokens generated."""
+        active = (rows if rows is not None else
+                  [r for r in self._slot_req
+                   if r is not None and r.phase is Phase.DECODE])
         if not active:
-            return
+            return 0
         B = self.cfg.max_batch_slots
         tokens = np.zeros((B, 1), np.int32)
         for r in active:
@@ -303,6 +476,7 @@ class ServingEngine:
         for r in active:
             r.generated.append(int(toks[r.slot]))
             self._maybe_finish(r)
+        return len(active)
 
     def _maybe_finish(self, req: Request) -> None:
         done = len(req.generated) >= req.max_new_tokens
@@ -321,6 +495,12 @@ class ServingEngine:
     def _commit(self, req: Request, now: float) -> None:
         """Scatter the request's new KV into its running blocks and fold them
         into the dependency tree."""
+        if not self._kv_reusable:
+            # recurrent state is not per-token pool KV: release the running
+            # blocks instead of folding unmatchable history into the tree
+            self.manager.abort_running(req.request_id)
+            self.manager.unpin(req.pinned)
+            return
         m = req.lookup.match
         prefix = m.matched_tokens
         full = req.full_tokens
@@ -435,24 +615,29 @@ class ServingEngine:
     def _read_dense(self, slot: int, start: int, end: int):
         """Read dense cache rows back as (L, T, H, D) for pool scatter."""
         if self.model_cfg.mla is not None:
+            # pool row == concat(latent, krope): kv_spec.head_dim is
+            # constructed as kv_lora_rank + qk_rope_head_dim
             latent = self.cache["latent"][:, slot, start:end]
             krope = self.cache["krope"][:, slot, start:end]
-            m = self.model_cfg.mla
-            D = self.kv_spec.head_dim
             k = jnp.concatenate([latent, krope], axis=-1)
-            pad = D - k.shape[-1]
-            if pad > 0:
-                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad)))
             return k[:, :, None, :], None
         k = self.cache["k"][:, slot, start:end]
         v = self.cache["v"][:, slot, start:end]
         return k, v
 
     def _observe_batch_size(self, now: float) -> None:
-        n = sum(1 for r in self._slot_req if r is not None)
-        self._batch_sizes.append((now, n))
-        while self._batch_sizes and self._batch_sizes[0][0] < now - 5.0:
-            self._batch_sizes.popleft()
-        if self._batch_sizes:
-            avg = sum(b for _, b in self._batch_sizes) / len(self._batch_sizes)
-            self.swapper.observe_batch_size(avg)
+        """Report the unified mixed-batch token load to the swapper.
+
+        The signal is the per-step REAL token count of the (mixed or
+        alternate) batch — decode rows contribute 1 token, prefill rows
+        their chunk slice — averaged over the last 5 s. Before the mixed
+        scheduler the swapper saw decode-slot occupancy only, blind to the
+        prefill share of the batch (Eq. 3's BS under-counted under load)."""
+        while self._batch_tokens and self._batch_tokens[0][0] < now - 5.0:
+            self._batch_tokens.popleft()
+        # an empty window means the engine has been idle for 5 s: observe 0
+        # so the demand signal decays instead of freezing at the last busy
+        # value (idle steps append nothing to the deque)
+        avg = (sum(b for _, b in self._batch_tokens) / len(self._batch_tokens)
+               if self._batch_tokens else 0.0)
+        self.swapper.observe_batch_size(avg)

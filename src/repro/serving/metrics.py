@@ -27,6 +27,11 @@ class ServingReport:
     p99_queue: float = 0.0
     avg_prefill_batch: float = 0.0  # requests coalesced per batched prefill
     prefill_compiles: int = 0  # distinct lowered prefill shapes (≤ #buckets)
+    # step scheduler (serving/scheduler.py)
+    p99_tpot: float = 0.0  # decode-latency tail the mixed budget bounds
+    avg_step_ms: float = 0.0  # mean measured engine-step wall time
+    ema_step_ms: float = 0.0  # TokenBudgetController's latency EMA
+    budget_utilization: float = 0.0  # mixed-batch tokens / step budget
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -50,6 +55,9 @@ def summarize(
     hbm_utilization: float = 0.0,
     avg_prefill_batch: float = 0.0,
     prefill_compiles: int = 0,
+    avg_step_ms: float = 0.0,
+    ema_step_ms: float = 0.0,
+    budget_utilization: float = 0.0,
 ) -> ServingReport:
     reqs = [r for r in finished if r.ttft is not None]
     ttfts = [r.ttft for r in reqs]
@@ -71,4 +79,8 @@ def summarize(
         p99_queue=_p(queues, 0.99),
         avg_prefill_batch=avg_prefill_batch,
         prefill_compiles=prefill_compiles,
+        p99_tpot=_p(tpots, 0.99),
+        avg_step_ms=avg_step_ms,
+        ema_step_ms=ema_step_ms,
+        budget_utilization=budget_utilization,
     )

@@ -19,15 +19,20 @@ over all batch slots to advance one row. This module replaces it with:
 Correctness relies on the models' row-masked extend (``true_lens``): pad
 positions neither write KV/recurrent state nor advance ``len``, and each
 row's next-token logits are gathered at its own last *real* position.
+
+:func:`assemble_batch` additionally accepts decode rows (``true_lens == 1``)
+so the Sarathi-style mixed scheduler (serving/scheduler.py) can pack prefill
+chunks and decode tokens into ONE batched ``extend`` per engine step.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -55,6 +60,40 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
             return b
     raise ValueError(f"suffix chunk of {n} tokens exceeds the largest "
                      f"bucket {buckets[-1]} — chunk before bucketing")
+
+
+def assemble_batch(
+    n_slots: int,
+    bucket: int,
+    prefill_chunks: Mapping[int, Sequence[int]],
+    decode_tokens: Mapping[int, int] | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Assemble one (possibly mixed) row-masked batch.
+
+    ``prefill_chunks`` maps slot -> that row's suffix token slice for this
+    step; ``decode_tokens`` maps slot -> the row's last generated token —
+    decode rows ride in the same batch as 1-token rows (``true_lens == 1``),
+    which is what makes Sarathi-style mixed scheduling a pure batch-assembly
+    concern: the row-masked ``extend`` already handles heterogeneous per-row
+    lengths. Returns (tokens (B, bucket) int32, true_lens (B,), row_mask (B,)).
+    """
+    tokens = np.zeros((n_slots, bucket), np.int32)
+    true_lens = np.zeros((n_slots,), np.int32)
+    row_mask = np.zeros((n_slots,), bool)
+    for slot, toks in prefill_chunks.items():
+        c = len(toks)
+        if c > bucket:
+            raise ValueError(f"chunk of {c} tokens exceeds bucket {bucket}")
+        tokens[slot, :c] = toks
+        true_lens[slot] = c
+        row_mask[slot] = True
+    for slot, tok in (decode_tokens or {}).items():
+        if row_mask[slot]:
+            raise ValueError(f"slot {slot} is both prefilling and decoding")
+        tokens[slot, 0] = tok
+        true_lens[slot] = 1
+        row_mask[slot] = True
+    return tokens, true_lens, row_mask
 
 
 @dataclasses.dataclass
@@ -129,12 +168,16 @@ class BatchPrefill:
         return jax.jit(step)
 
     def __call__(self, params, lora, cache, tokens, start, true_lens,
-                 row_mask, adapter_ids):
-        """Run one coalesced prefill chunk.
+                 row_mask, adapter_ids, stat_mask=None):
+        """Run one coalesced (possibly mixed) chunk.
 
         tokens: (B, bucket) int32 — pad with any token id beyond true_lens
         start: (B,) current cache lengths; true_lens: (B,) real chunk tokens
         (0 for rows riding along); row_mask: (B,) bool participating rows.
+        ``stat_mask`` (B,) bool restricts PrefillStats accounting to the
+        actual prefill chunk rows — mixed batches carry decode rider rows
+        (true_lens == 1) that must not inflate avg_prefill_batch or count
+        their bucket padding as prefill overhead. Defaults to ``row_mask``.
         Returns (per-row last-real-token logits (B, V), merged cache).
         """
         bucket = int(tokens.shape[1])
@@ -143,8 +186,10 @@ class BatchPrefill:
                 raise ValueError(f"tokens padded to {bucket}, not a "
                                  f"configured bucket {self.buckets}")
             self._fns[bucket] = self._build(bucket)
-        real = int(jnp.sum(true_lens)) if hasattr(true_lens, "sum") else 0
-        nrows = int(jnp.sum(row_mask))
+        sm = row_mask if stat_mask is None else stat_mask
+        sm = np.asarray(sm)
+        real = int(np.asarray(true_lens)[sm].sum())
+        nrows = int(sm.sum())
         self.stats.calls += 1
         self.stats.rows += nrows
         self.stats.tokens += real

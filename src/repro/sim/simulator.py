@@ -43,6 +43,15 @@ class SimConfig:
     straggler_p: float = 0.0  # probability a transfer is 10x slow
     straggler_timeout: float = 1.0
     sample_period: float = 5.0  # timeline sampling
+    # step scheduling (mirrors EngineConfig.schedule_mode):
+    # "alternate" — a ready prefill runs its whole suffix in one iteration
+    #               (decode rides the same iteration but pays the full
+    #               prefill latency: TPOT spikes under prefill load);
+    # "mixed"     — Sarathi-style: decode tokens take 1 budget token each,
+    #               prefill suffixes advance chunk-by-chunk with whatever
+    #               budget remains, so iteration time stays bounded.
+    schedule_mode: str = "alternate"
+    step_token_budget: int = 512  # per-iteration token budget (mixed mode)
 
 
 @dataclasses.dataclass
@@ -61,6 +70,8 @@ class SimRequest:
     lookup: object = None
     pinned: list = dataclasses.field(default_factory=list)
     rid: str = ""
+    # mixed-mode chunked prefill progress (suffix tokens already computed)
+    prefill_done: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -209,7 +220,11 @@ class ServingSimulator:
         now = 0.0
         next_sample = 0.0
         rid = 0
+        # unified batch load: last iteration's real tokens (decode rows
+        # contribute 1 each, prefill rows their chunk) — same signal the
+        # engine feeds the swapper under the mixed scheduler
         batch_window: deque[tuple[float, int]] = deque()
+        last_iter_tokens = 0
 
         recent_ttfts: deque[tuple[float, float]] = deque()
 
@@ -238,7 +253,7 @@ class ServingSimulator:
             # periodic swapper (proactive: transfers happen in the background,
             # off every query's critical path — FASTLIBRA's key advantage)
             if self.swapper.due(now):
-                batch_window.append((now, len(running)))
+                batch_window.append((now, last_iter_tokens))
                 while batch_window and batch_window[0][0] < now - 5.0:
                     batch_window.popleft()
                 if batch_window:
@@ -303,31 +318,60 @@ class ServingSimulator:
                     r.hbm_hit_tokens = 0
                     ready = now
                 r.ready_time = ready
+                r.prefill_done = 0
                 pending.append(r)
             # build one iteration
             ready_prefills = [r for r in pending if r.ready_time <= now]
             if ready_prefills or running:
                 t_iter = 0.0
-                for r in ready_prefills:
-                    pending.remove(r)
-                    q = r.query
-                    new = len(q.prompt) - r.matched_tokens
-                    t_iter += self.hw.prefill_time(new, r.matched_tokens)
+                entered: list[SimRequest] = []  # prefills completing now
+                prefill_tokens = 0
+                if cfg.schedule_mode == "mixed":
+                    # Sarathi-style: decode tokens (1 per running request)
+                    # come off the top of the budget; prefill suffixes
+                    # advance chunk-by-chunk with the remainder, so one long
+                    # prompt cannot blow up this iteration's duration
+                    budget = max(cfg.step_token_budget - len(running), 1)
+                    for r in sorted(ready_prefills,
+                                    key=lambda r: r.query.arrival):
+                        if budget <= 0:
+                            break
+                        left = (len(r.query.prompt) - r.matched_tokens
+                                - r.prefill_done)
+                        take = min(left, budget)
+                        t_iter += self.hw.prefill_time(
+                            take, r.matched_tokens + r.prefill_done)
+                        r.prefill_done += take
+                        budget -= take
+                        prefill_tokens += take
+                        if (r.prefill_done
+                                >= len(r.query.prompt) - r.matched_tokens):
+                            entered.append(r)
+                            pending.remove(r)
+                else:
+                    for r in ready_prefills:
+                        pending.remove(r)
+                        q = r.query
+                        new = len(q.prompt) - r.matched_tokens
+                        t_iter += self.hw.prefill_time(new, r.matched_tokens)
+                        prefill_tokens += new
+                        entered.append(r)
                 ctx = sum(
                     len(r.query.prompt) + r.tokens_done for r in running
                 )
                 t_iter += self.hw.decode_time(len(running), ctx)
+                last_iter_tokens = len(running) + prefill_tokens
                 now += max(t_iter, 1e-6)
-                for r in ready_prefills:
+                for r in entered:
                     r.first_token_time = now
                     r.tokens_done = 1
                     recent_ttfts.append((now, r.ttft))
                     running.append(r)
                 still = []
-                any_progress = bool(ready_prefills)
+                any_progress = bool(entered) or prefill_tokens > 0
                 stalled: list[SimRequest] = []
                 for r in running:
-                    if r in ready_prefills:
+                    if r in entered:
                         pass
                     else:
                         # decode KV growth is allocated lazily; a full pool
@@ -359,7 +403,10 @@ class ServingSimulator:
                     waiting.appendleft(victim)
                 running = still + stalled
             else:
-                # idle: jump to the next event
+                # idle: jump to the next event; the batch-load signal decays
+                # to zero (nothing ran this iteration) instead of freezing
+                # at the last busy token count
+                last_iter_tokens = 0
                 nxt = []
                 if arrivals:
                     nxt.append(arrivals[0][0])

@@ -91,6 +91,99 @@ op_st = st.one_of(
     st.tuples(st.just("tick"), st.floats(0.1, 5.0)),
 )
 
+# I6: the abort/evict interleaving — queries stay OPEN (pinned, holding
+# running blocks) across other queries' lifecycles, then commit or abort in
+# arbitrary order, with swapper sweeps in between. Nothing before this
+# fuzzed partially-completed queries racing the eviction machinery.
+mixed_op_st = st.one_of(
+    st.tuples(st.just("begin"), lora_st, tokens_st, st.integers(1, 16)),
+    st.tuples(st.just("grow"), st.integers(0, 7), st.integers(1, 8)),
+    st.tuples(st.just("commit"), st.integers(0, 7)),
+    st.tuples(st.just("abort"), st.integers(0, 7)),
+    st.tuples(st.just("tick"), st.floats(0.1, 5.0), st.floats(0.0, 24.0)),
+)
+
+
+def _check_breakdown(mgr, hbm_bytes):
+    """hbm_breakdown totals: categories never exceed the pool capacity."""
+    bd = mgr.hbm_breakdown()
+    used = bd["lora_bytes"] + bd["history_kv_bytes"] + bd["running_kv_bytes"]
+    assert used <= bd["total_bytes"], bd
+    assert bd["total_bytes"] <= hbm_bytes, bd
+
+
+@given(st.lists(mixed_op_st, min_size=1, max_size=40), st.integers(8, 32))
+@settings(max_examples=100, deadline=None)
+def test_manager_invariants_with_open_queries(ops, hbm_blocks):
+    hbm_bytes = hbm_blocks * BLOCK_BYTES
+    mgr, sw = make_fastlibra(
+        hbm_bytes=hbm_bytes,
+        host_bytes=128 * BLOCK_BYTES,
+        kv_bytes_per_token=KVB,
+        block_size=BS,
+    )
+    for lid in "abc":
+        mgr.register_lora(lid, BLOCK_BYTES, now=0.0)
+    now = 1.0
+    qid = 0
+    open_queries: list[dict] = []  # admitted, pinned, not yet resolved
+    for op in ops:
+        now += 0.05
+        if op[0] == "begin":
+            _, lid, toks, new_toks = op
+            lk = mgr.lookup(lid, toks, now)
+            adm = mgr.admit(lk, now)
+            if adm.queued:
+                mgr.drain_ops()
+            else:
+                name = f"m{qid}"
+                qid += 1
+                need = len(toks) - lk.match.matched_tokens + new_toks
+                blocks = mgr.allocate_running(name, need, now)
+                if blocks is None:
+                    mgr.abort_running(name)
+                    mgr.unpin(adm.pinned)
+                else:
+                    open_queries.append({
+                        "id": name, "lookup": lk, "pinned": adm.pinned,
+                        "toks": tuple(toks), "new": new_toks,
+                    })
+        elif op[0] == "grow" and open_queries:
+            q = open_queries[op[1] % len(open_queries)]
+            got = mgr.allocate_running(q["id"], op[2], now)
+            if got is not None:
+                q["new"] += op[2]
+        elif op[0] == "commit" and open_queries:
+            q = open_queries.pop(op[1] % len(open_queries))
+            full = q["toks"] + tuple(
+                range(1000 + qid * 100, 1000 + qid * 100 + q["new"]))
+            mgr.commit(q["id"], q["lookup"], full, now)
+            mgr.unpin(q["pinned"])
+        elif op[0] == "abort" and open_queries:
+            q = open_queries.pop(op[1] % len(open_queries))
+            mgr.abort_running(q["id"])
+            mgr.unpin(q["pinned"])
+        elif op[0] == "tick":
+            sw.observe_batch_size(op[2])  # unified token-count signal
+            sw.tick(now + op[1])
+            mgr.drain_ops()
+        # I1 + I2 + I6 after every operation
+        mgr.check_invariants()
+        _check_breakdown(mgr, hbm_bytes)
+    # resolve stragglers both ways, then nothing may stay pinned
+    for i, q in enumerate(open_queries):
+        if i % 2 == 0:
+            mgr.abort_running(q["id"])
+        else:
+            full = q["toks"] + tuple(range(2000, 2000 + q["new"]))
+            mgr.commit(q["id"], q["lookup"], full, now)
+        mgr.unpin(q["pinned"])
+        mgr.check_invariants()
+        _check_breakdown(mgr, hbm_bytes)
+    for n in mgr.tree.iter_nodes():
+        assert n.ref_count == 0
+    assert mgr.invalid_kv_fraction() == 0.0
+
 
 @given(st.lists(op_st, min_size=1, max_size=40), st.integers(8, 32))
 @settings(max_examples=100, deadline=None)

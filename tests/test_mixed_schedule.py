@@ -1,0 +1,266 @@
+"""Mixed prefill+decode step scheduler tests (serving/scheduler.py).
+
+Four pinned properties:
+  S1  planner math: decode-first packing, FCFS prefill fill, budget respected,
+      progress guarantee; budget controller AIMD behavior and clamps
+  S2  differential: mixed-mode serving is token-identical to
+      ``prefill_mode="eager"`` end-to-end for ALL FOUR cache layouts
+      (GQA / MLA / RWKV / RG-LRU), including a long prompt whose chunks
+      interleave with another request's decode rows in the same batch
+  S3  trace regression: a seeded multi-LoRA trace produces a sane report
+      (finite positive latencies, rates in [0,1], bounded compiles) in BOTH
+      schedule modes, so metric regressions fail loudly
+  S4  the unified mixed-batch token count (not decode-slot occupancy) feeds
+      the swapper/cost model; expected_lora_demand pinned by hand
+"""
+
+import itertools
+
+import jax
+import pytest
+
+from repro import configs
+from repro.core.cost_model import expected_lora_demand
+from repro.serving import (
+    EngineConfig,
+    Phase,
+    Request,
+    ServingEngine,
+    TokenBudgetController,
+    plan_step,
+)
+
+# ------------------------------------------------------------ S1: planner
+
+
+def test_plan_step_decode_first_then_even_split():
+    plan = plan_step([0, 3], [(1, 100), (2, 10)], budget=40, chunk_ceiling=32)
+    assert plan.decode_slots == (0, 3)
+    # 40 - 2 decode tokens = 38 left: even share 19 each, row 2 only needs
+    # 10, FCFS waterfill hands row 1 the 9-token leftover
+    assert plan.prefill_chunks == {1: 28, 2: 10}
+    assert plan.tokens == 2 + 28 + 10
+    assert plan.tokens <= plan.budget
+
+
+def test_plan_step_budget_respected_and_ceiling_applies():
+    plan = plan_step([], [(0, 500), (1, 500)], budget=48, chunk_ceiling=64)
+    assert plan.prefill_chunks == {0: 24, 1: 24}
+    assert plan.tokens == 48
+    # the per-row ceiling caps even a lone row with a huge budget
+    plan = plan_step([], [(0, 500)], budget=4096, chunk_ceiling=64)
+    assert plan.prefill_chunks == {0: 64}
+
+
+def test_plan_step_progress_guarantee_under_decode_saturation():
+    # decode alone exhausts the budget: the first prefill row still advances
+    plan = plan_step(list(range(8)), [(9, 50), (10, 50)], budget=8,
+                     chunk_ceiling=16)
+    assert plan.prefill_chunks == {9: 1}
+    # fewer leftover tokens than rows: 1 token each while the budget lasts
+    plan = plan_step(list(range(8)), [(9, 50), (10, 50), (11, 50), (12, 50)],
+                     budget=11, chunk_ceiling=16)
+    assert plan.prefill_chunks == {9: 1, 10: 1, 11: 1}
+    # rows with nothing left are skipped entirely
+    plan = plan_step([], [(0, 0), (1, 5)], budget=16, chunk_ceiling=16)
+    assert plan.prefill_chunks == {1: 5}
+
+
+def test_budget_controller_aimd_and_clamps():
+    ctl = TokenBudgetController(max_budget=256, target_step_ms=10.0,
+                                min_budget=16)
+    assert ctl.budget == 256
+    for _ in range(30):  # sustained overshoot: shrink to the floor
+        ctl.observe(50.0)
+    assert ctl.budget == 16
+    assert ctl.ema_ms > 10.0
+    for _ in range(40):  # sustained headroom: grow back, clamped at max
+        ctl.observe(1.0)
+    assert ctl.budget == 256
+    # static mode: target <= 0 never moves the budget
+    ctl2 = TokenBudgetController(max_budget=64, target_step_ms=0.0)
+    for _ in range(5):
+        ctl2.observe(1000.0)
+    assert ctl2.budget == 64
+    assert ctl2.ema_ms > 0  # the EMA still tracks for reporting
+
+
+def test_budget_controller_dead_band_holds():
+    ctl = TokenBudgetController(max_budget=256, target_step_ms=10.0,
+                                min_budget=16)
+    ctl.observe(50.0)  # shrink once
+    b = ctl.budget
+    assert b < 256
+    ctl.ema_ms = 9.0  # place the EMA inside [headroom*target, target]
+    for _ in range(20):
+        ctl.observe(9.0)
+    assert ctl.budget == b
+
+
+# ------------------------------------------------- S2: differential sweep
+
+ARCHS = ["qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-1.6b",
+         "recurrentgemma-2b"]
+
+_ids = itertools.count()
+
+
+def _req(adapter, prompt, n=3):
+    return Request(f"mx{next(_ids)}", adapter, tuple(prompt), max_new_tokens=n)
+
+
+def _engine(arch, mode, schedule, budget=24, chunk=8):
+    cfg = configs.reduced(configs.get(arch))
+    ecfg = EngineConfig(
+        hbm_bytes=8 << 20, host_bytes=32 << 20, block_size=4,
+        max_batch_slots=4, max_seq_len=96, prefill_mode=mode,
+        prefill_chunk=chunk, prefill_min_bucket=4,
+        schedule_mode=schedule, step_token_budget=budget,
+    )
+    eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(7))
+    for i in range(3):
+        eng.register_adapter(f"lora-{i}")
+    return eng
+
+
+def _workload():
+    """Three short multi-LoRA prompts plus one 30-token prompt that must
+    chunk (chunk=8 → 4 chunks) while the short rows decode."""
+    reqs = [_req(f"lora-{i % 3}", range(30 + i, 40 + i + 2 * i)) for i in range(3)]
+    reqs.append(_req("lora-1", range(100, 130)))
+    return reqs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_mixed_matches_eager_all_layouts(arch):
+    outs = {}
+    for mode, schedule in (("eager", "alternate"), ("bucketed", "mixed")):
+        eng = _engine(arch, mode, schedule)
+        reqs = _workload()
+        for r in reqs:
+            eng.submit(r)
+        rep = eng.run()
+        assert rep.n_finished == len(reqs)
+        outs[schedule] = [tuple(r.generated) for r in reqs]
+    assert outs["alternate"] == outs["mixed"], (
+        f"{arch}: mixed scheduling changed generation")
+
+
+def test_long_prompt_chunks_interleave_with_decode_rows():
+    """The mixed batch must actually mix: while the long prompt is still
+    PREFILLING, short requests keep generating *in the same step* — and the
+    final tokens still match an eager run."""
+    eng = _engine("qwen3-0.6b", "bucketed", "mixed", budget=12, chunk=8)
+    short = _req("lora-0", range(10, 18), n=8)  # one 8-token chunk
+    eng.submit(short)
+    eng.step()  # short admitted + prefilled, starts decoding
+    assert short.phase is Phase.DECODE
+    long = _req("lora-1", range(100, 164), n=2)  # 64 tokens = 8 chunks
+    eng.submit(long)
+    mixed_steps = 0
+    for _ in range(6):
+        before = len(short.generated)
+        eng.step()
+        if long.phase is Phase.PREFILLING and len(short.generated) > before:
+            mixed_steps += 1
+    assert mixed_steps > 0, "decode starved while the long prompt prefilled"
+    eng.run()
+    assert long.phase is Phase.FINISHED and short.phase is Phase.FINISHED
+    assert long.prefill_chunks >= 8
+
+    ref = _engine("qwen3-0.6b", "eager", "alternate")
+    rs = _req("lora-0", range(10, 18), n=8)
+    ref.submit(rs)
+    ref.step()
+    rl = _req("lora-1", range(100, 164), n=2)
+    ref.submit(rl)
+    ref.run()
+    assert tuple(short.generated) == tuple(rs.generated)
+    assert tuple(long.generated) == tuple(rl.generated)
+
+
+def test_dynamic_budget_engine_still_token_identical():
+    """target_step_ms > 0 makes chunk sizes nondeterministic (wall-clock
+    driven) — generation must be invariant to the chunking anyway."""
+    eng = _engine("qwen3-0.6b", "bucketed", "mixed", budget=32)
+    eng.budget_ctl.target_step_ms = 5.0
+    reqs = _workload()
+    for r in reqs:
+        eng.submit(r)
+    rep = eng.run()
+    assert rep.n_finished == len(reqs)
+    ref = _engine("qwen3-0.6b", "eager", "alternate")
+    refs = _workload()
+    for r in refs:
+        ref.submit(r)
+    ref.run()
+    assert [tuple(r.generated) for r in reqs] == [
+        tuple(r.generated) for r in refs]
+
+
+# --------------------------------------------- S3: trace regression (both)
+
+
+def _trace(n=10, seed=3):
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        adapter = f"lora-{rng.randint(0, 3)}"
+        plen = int(rng.choice([6, 9, 14, 21, 30]))
+        prompt = tuple(int(t) for t in rng.randint(1, 500, size=plen))
+        reqs.append(Request(f"tr{seed}-{i}", adapter, prompt,
+                            max_new_tokens=4))
+    return reqs
+
+
+@pytest.mark.parametrize("schedule", ["mixed", "alternate"])
+def test_trace_report_sanity(schedule):
+    eng = _engine("qwen3-0.6b", "bucketed", schedule, budget=48, chunk=16)
+    reqs = _trace()
+    for r in reqs:
+        eng.submit(r)
+    rep = eng.run(max_steps=50_000)
+    assert rep.n_finished == len(reqs)
+    assert 0 < rep.avg_ttft < float("inf")
+    assert 0 < rep.p99_ttft < float("inf")
+    assert 0 < rep.avg_tpot < float("inf")
+    assert 0 < rep.p99_tpot < float("inf")
+    assert rep.p99_tpot >= rep.avg_tpot * 0.5  # p99 can't collapse below mean scale
+    assert 0.0 <= rep.kv_hit_rate <= 1.0
+    assert 0.0 <= rep.lora_hit_rate <= 1.0
+    assert 0.0 <= rep.hbm_utilization <= 1.0
+    # ≤ one lowered shape per (bucket × {prefill-only, mixed}) phase
+    assert 0 < rep.prefill_compiles <= len(eng.prefill.buckets) * 2
+    assert rep.avg_step_ms > 0
+    assert rep.ema_step_ms > 0
+    if schedule == "mixed":
+        assert 0.0 < rep.budget_utilization <= 1.0
+    eng.manager.check_invariants()
+
+
+# ------------------------------------- S4: unified batch-size observation
+
+
+def test_expected_lora_demand_hand_computed():
+    # Eq. 3 with probs (.5, .25, .25) and BS=4:
+    # (1-.5^4) + 2*(1-.75^4) = 0.9375 + 2*0.68359375
+    val = expected_lora_demand([0.5, 0.25, 0.25], 4.0)
+    assert val == pytest.approx(0.9375 + 2 * 0.68359375)
+    # BS=0 → nothing demanded; huge BS → saturates to the adapter count
+    assert expected_lora_demand([0.5, 0.25, 0.25], 0.0) == 0.0
+    assert expected_lora_demand([0.5, 0.25, 0.25], 1e6) == pytest.approx(3.0)
+
+
+@pytest.mark.parametrize("schedule", ["mixed", "alternate"])
+def test_swapper_sees_token_load_not_slot_occupancy(schedule):
+    """One 32-token prompt in one slot: the observed batch signal must be
+    the chunk token count (≫ 1), not the single occupied decode slot."""
+    eng = _engine("qwen3-0.6b", "bucketed", schedule, budget=64, chunk=32)
+    eng.submit(_req("lora-0", range(200, 232), n=2))
+    eng.step()  # admit + prefill the full 32-token suffix
+    eng._observe_batch_size(eng._now())
+    assert eng.swapper._recent_batch_size >= 30, (
+        "swapper still sees slot occupancy, not mixed-batch tokens")
+    assert eng.manager.scorer._recent_batch_size >= 30
