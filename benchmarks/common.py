@@ -25,7 +25,7 @@ DURATION = 180.0 if QUICK else 420.0
 
 
 def deployed(model: str) -> DeployedModel:
-    return DeployedModel(configs.get(model), cards=CARDS[model])
+    return DeployedModel(configs.get(model), cards=CARDS.get(model, 1))
 
 
 _trace_cache: dict = {}

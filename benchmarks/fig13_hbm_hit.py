@@ -1,4 +1,6 @@
-"""Fig. 13 — average HBM utilization and LoRA/KV cache hit rates."""
+"""Fig. 13 — average HBM utilization and LoRA/KV cache hit rates, plus the
+beyond-paper recurrent series: state-snapshot hit rates when the prefix
+layer is RWKV state snapshots instead of per-token KV."""
 
 import statistics
 
@@ -18,6 +20,15 @@ def run(out: CsvOut) -> None:
                 f"kv_hit={s['kv_hit_rate']:.3f};lora_hit={s['lora_hit_rate']:.3f};"
                 f"invalid_kv={s['avg_invalid_kv']:.3f}",
             )
+        # recurrent-state reuse series: same trace shape, snapshot nodes
+        res = run_sim("rwkv6-1.6b", scenario, "fastlibra", n_loras=50)
+        s = res.summary()
+        out.emit(
+            f"fig13/{scenario}/fastlibra-rwkv6",
+            s["avg_hbm_usage"] * 1e6,
+            f"state_hit={s['state_hit_rate']:.3f};"
+            f"lora_hit={s['lora_hit_rate']:.3f}",
+        )
     fl = agg["fastlibra"]
     for base in ("vllm", "slora"):
         b = agg[base]

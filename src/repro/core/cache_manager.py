@@ -13,6 +13,11 @@ One code path, parametrized the way the paper's ablations are:
   never enter the tree.
 * ``scorer`` — CostModelScorer (Eq. 6) or LRUScorer; ``lora_reward=False``
   gives FASTLIBRA-WOL.
+* ``state_bytes`` — > 0 turns the prefix layer into recurrent-state snapshot
+  nodes (RWKV/RG-LRU): ``lookup_state`` resumes from the deepest snapshot at
+  or below the prompt and ``commit_state`` captures new boundaries; the same
+  unified pool, dependency/validity machinery and swapper move whole
+  snapshots instead of per-token blocks.
 
 The manager is pure control plane and time-explicit (``now`` is passed in),
 so the discrete-event simulator and the real JAX engine drive the *same*
@@ -67,6 +72,11 @@ class LookupResult:
     host_hit_tokens: int
     history_tokens: int  # reusable prefix length presented by the query
     swap_in_nodes: list[Node]  # host-resident nodes on the matched path
+    # recurrent-state lookups (lookup_state) only: the deepest snapshot node
+    # carrying payload at or below the prompt, and the prefix boundary
+    # (token count) decoding can resume from
+    state_node: Optional[Node] = None
+    state_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -93,10 +103,21 @@ class ManagerConfig:
     lora_reward: bool = True
     sigmoid_tau: float = 15.0
     density_ordering: bool = True  # False = paper-literal Eval ordering
+    # Recurrent-state prefix caching: > 0 enables STATE snapshot nodes of
+    # this byte size (one full-model recurrent state). Snapshot boundaries
+    # are arbitrary token positions — the data plane moves whole snapshots,
+    # not per-token blocks — so the dependency tree runs unquantized
+    # (align=1) when state caching is on.
+    state_bytes: int = 0
 
     @property
     def block_bytes(self) -> int:
         return self.block_size * self.kv_bytes_per_token
+
+    @property
+    def state_blocks(self) -> int:
+        """Unified-pool blocks one state snapshot occupies."""
+        return -(-self.state_bytes // self.block_bytes) if self.state_bytes else 0
 
 
 @dataclasses.dataclass
@@ -112,6 +133,12 @@ class ManagerStats:
     swap_out_count: int = 0
     drops: int = 0
     queue_events: int = 0
+    # recurrent-state snapshot lookups (symmetric with the KV counters:
+    # hit tokens are the prefix boundary a resumable snapshot covers)
+    state_lookups: int = 0
+    state_hits: int = 0
+    state_hit_tokens: int = 0
+    state_host_hit_tokens: int = 0
 
     def lora_hit_rate(self) -> float:
         return self.lora_hbm_hits / self.lookups if self.lookups else 0.0
@@ -119,6 +146,14 @@ class ManagerStats:
     def kv_hit_rate(self) -> float:
         return (
             self.kv_hbm_hit_tokens / self.history_tokens
+            if self.history_tokens
+            else 0.0
+        )
+
+    def state_hit_rate(self) -> float:
+        """Token-weighted snapshot hit rate (resumed / presented history)."""
+        return (
+            self.state_hit_tokens / self.history_tokens
             if self.history_tokens
             else 0.0
         )
@@ -139,7 +174,12 @@ class CacheManager:
         bb = config.block_bytes
         n_hbm = max(1, hbm_bytes // bb)
         n_host = max(1, host_bytes // bb)
-        self.tree = DependencyTree(align=config.block_size, decay_tau=config.decay_tau)
+        # State snapshots live at arbitrary prefix boundaries (the data plane
+        # moves whole fixed-size snapshots, never per-token blocks), so the
+        # tree runs unquantized when state caching is enabled.
+        align = 1 if config.state_bytes else config.block_size
+        self.tree = DependencyTree(align=align, decay_tau=config.decay_tau,
+                                   block_tokens=config.block_size)
         if config.unified_pool:
             self.pool = BlockPool(n_hbm, n_host, bb)
             self.lora_pool = self.pool
@@ -231,6 +271,58 @@ class CacheManager:
         self.stats.history_tokens += len(history_tokens)
         return res
 
+    def lookup_state(
+        self, lora_id: str, history_tokens: Sequence[int], now: float
+    ) -> LookupResult:
+        """Recurrent-arch lookup: deepest *resumable* snapshot ≤ the prompt.
+
+        The matched chain may contain hollow STATE interiors (radix-split
+        residue carrying no snapshot) — only nodes with payload blocks are
+        resume points, and a snapshot encodes the FULL prefix state at its
+        boundary, so exactly one node (the deepest payload node) needs to be
+        resident. ``swap_in_nodes`` still lists every host node on the path
+        down to it, shallow→deep, so admit preserves the validity invariant
+        (the hollow ones move zero bytes).
+        """
+        m = self.tree.match(lora_id, history_tokens, now)
+        lora_resident = (
+            m.lora_node is not None and m.lora_node.tier is Residency.HBM
+        )
+        snode: Optional[Node] = None
+        stokens = 0
+        pos = 0
+        best_depth = 0
+        for i, n in enumerate(m.kv_nodes):
+            pos += n.num_tokens
+            if n.kind is NodeKind.STATE and n.has_payload:
+                snode, stokens, best_depth = n, pos, i + 1
+        swap_in: list[Node] = []
+        if m.lora_node is not None and m.lora_node.tier is Residency.HOST:
+            swap_in.append(m.lora_node)
+        for n in m.kv_nodes[:best_depth]:
+            if n.tier is Residency.HOST:
+                swap_in.append(n)
+        hbm_hit = stokens if (snode is not None and snode.tier is Residency.HBM) else 0
+        host_hit = stokens if (snode is not None and snode.tier is Residency.HOST) else 0
+        res = LookupResult(
+            match=m,
+            lora_resident=lora_resident,
+            hbm_hit_tokens=hbm_hit,
+            host_hit_tokens=host_hit,
+            history_tokens=len(history_tokens),
+            swap_in_nodes=swap_in,
+            state_node=snode,
+            state_tokens=stokens,
+        )
+        self.stats.lookups += 1
+        self.stats.lora_hbm_hits += int(lora_resident)
+        self.stats.history_tokens += len(history_tokens)
+        self.stats.state_lookups += 1
+        self.stats.state_hits += int(snode is not None)
+        self.stats.state_hit_tokens += hbm_hit
+        self.stats.state_host_hit_tokens += host_hit
+        return res
+
     # ----------------------------------------------------------------- admit
     def admit(self, lookup: LookupResult, now: float) -> AdmitResult:
         """Bring the query's LoRA + matched KV chain into HBM and pin them.
@@ -247,8 +339,19 @@ class CacheManager:
             if node.num_blocks > pool.num_hbm_blocks:
                 self.stats.queue_events += 1
                 return AdmitResult(ops=[], pinned=[], queued=True)
+        # Protect the query's whole working set while making room: without
+        # this, swapping in a later node can evict an *earlier* node of the
+        # same admission (e.g. the just-loaded LoRA to fit its own KV chain,
+        # leaving an HBM child under a host parent — a validity violation the
+        # state-interleave fuzz caught) or silently evict an already-resident
+        # matched node whose blocks the data plane is about to gather.
+        m = lookup.match
+        protect = {n.node_id for n in needed}
+        protect.update(n.node_id for n in m.kv_nodes)
+        if m.lora_node is not None:
+            protect.add(m.lora_node.node_id)
         for node in needed:
-            op = self._swap_in_node(node, now)
+            op = self._swap_in_node(node, now, protect=protect)
             if op is None:
                 # roll back pins made so far; caller queues
                 self.stats.queue_events += 1
@@ -377,13 +480,73 @@ class CacheManager:
                 p = p.parent
         return node
 
+    def commit_state(
+        self, lora_id: str, prefix_tokens: Sequence[int], now: float
+    ) -> Optional[Node]:
+        """Record a freshly captured recurrent-state snapshot at a boundary.
+
+        Inserts (or reuses) a STATE node covering ``prefix_tokens`` under the
+        LoRA branch and allocates ``state_blocks`` HBM blocks for its
+        payload, evicting per the scorer on demand. Returns the node — whose
+        ``hbm_blocks`` the data plane must now fill via ``StateCache.store``
+        — or None when the snapshot is not cacheable: state caching off,
+        history reuse disabled (S-LoRA ablation), empty boundary, the
+        boundary is already snapshotted, the ancestry is not HBM-resident
+        (unlike KV commit, which demotes, an unplaceable snapshot is simply
+        dropped — recompute is its backstop), or HBM cannot make room. The
+        caller then just discards the captured state.
+        """
+        if self.config.state_bytes <= 0 or not self.config.reuse_history_kv:
+            return None
+        toks = tuple(prefix_tokens)
+        if not toks:
+            return None
+        lnode = self.tree.lora_node(lora_id)
+        if lnode is None:
+            return None
+        # insert a hollow husk first; payload is attached only once blocks
+        # are secured, so a failed allocation leaves no dangling accounting
+        node, absorbed = self.tree.insert_kv_ext(
+            parent=lnode, tokens=toks, size_bytes=0, num_blocks=0,
+            tier=Residency.HBM, now=now, kind=NodeKind.STATE,
+        )
+        fresh = absorbed < len(toks)
+        if node.kind is not NodeKind.STATE or node.has_payload:
+            return None  # boundary collides with a KV node / already cached
+        ok = True
+        p = node.parent
+        while p is not None and p.kind is not NodeKind.ROOT:
+            if p.tier is not Residency.HBM:
+                ok = False  # ancestor swapped out since the query's lookup
+                break
+            p = p.parent
+        nblocks = self.config.state_blocks
+        if ok:
+            ok = self._make_room(
+                self.kv_pool, nblocks, now, protect={node.node_id}
+            )
+        if not ok:
+            if fresh and not node.children and node.ref_count == 0:
+                self.tree.remove(node)  # drop the husk we just created
+            return None
+        node.hbm_blocks = self.kv_pool.allocate(Tier.HBM, nblocks)
+        node.num_blocks = nblocks
+        node.size_bytes = self.config.state_bytes
+        node.tier = Residency.HBM
+        return node
+
     # ------------------------------------------------------------- swap core
-    def _swap_in_node(self, node: Node, now: float) -> Optional[SwapOp]:
-        """host -> HBM. Returns None if room cannot be made."""
+    def _swap_in_node(
+        self, node: Node, now: float, protect: Optional[set[int]] = None
+    ) -> Optional[SwapOp]:
+        """host -> HBM. Returns None if room cannot be made. ``protect``
+        shields additional nodes (the admitting query's working set) from the
+        demand evictions this swap-in may trigger."""
         if node.tier is Residency.HBM:
             return SwapOp(SwapKind.SWAP_IN, node.kind, node.lora_id, 0, node_id=node.node_id)
         pool = self._pool_for(node.kind)
-        if not self._make_room(pool, node.num_blocks, now, protect={node.node_id}):
+        shield = (protect or set()) | {node.node_id}
+        if not self._make_room(pool, node.num_blocks, now, protect=shield):
             return None
         dst = pool.allocate(Tier.HBM, node.num_blocks)
         src = node.host_blocks
@@ -419,8 +582,10 @@ class CacheManager:
             )
             self._pending_ops.append(op)
             return op
-        # host full: drop. KV nodes are removed (data lost); LoRA nodes keep
-        # their tree identity (weights reloadable from disk) with tier=None.
+        # host full: drop. KV/STATE nodes are removed (data lost); LoRA nodes
+        # keep their tree identity (weights reloadable from disk) with
+        # tier=None. A dropped snapshot's blocks vanish with it — its
+        # children are self-contained snapshots, unaffected.
         pool.release(Tier.HBM, src)
         node.hbm_blocks = []
         self.stats.drops += 1
@@ -429,7 +594,7 @@ class CacheManager:
             src_blocks=tuple(src), node_id=node.node_id,
         )
         self._pending_ops.append(op)
-        if node.kind is NodeKind.KV and not node.children:
+        if node.kind is not NodeKind.LORA and not node.children:
             self.tree.remove(node)
         else:
             node.tier = None
@@ -485,7 +650,8 @@ class CacheManager:
 
     # -------------------------------------------------------------- metrics
     def hbm_breakdown(self) -> dict:
-        """HBM bytes by category (paper Fig. 14): history KV / LoRA / running."""
+        """HBM bytes by category (paper Fig. 14): history KV / state
+        snapshots / LoRA / running."""
         bb = self.config.block_bytes
         lora = sum(
             len(n.hbm_blocks) * bb
@@ -493,6 +659,10 @@ class CacheManager:
         )
         kv = sum(
             len(n.hbm_blocks) * bb for n in self.tree.iter_nodes({NodeKind.KV})
+        )
+        state = sum(
+            len(n.hbm_blocks) * bb
+            for n in self.tree.iter_nodes({NodeKind.STATE})
         )
         running = sum(len(b) * bb for b in self._running.values())
         total = (
@@ -503,6 +673,7 @@ class CacheManager:
         return {
             "lora_bytes": lora,
             "history_kv_bytes": kv,
+            "state_snapshot_bytes": state,
             "running_kv_bytes": running,
             "total_bytes": total,
         }
@@ -510,7 +681,7 @@ class CacheManager:
     def invalid_kv_fraction(self) -> float:
         total = sum(
             n.size_bytes
-            for n in self.tree.iter_nodes({NodeKind.KV})
+            for n in self.tree.iter_nodes({NodeKind.KV, NodeKind.STATE})
             if n.tier is Residency.HBM
         )
         if total == 0:

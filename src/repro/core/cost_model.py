@@ -55,9 +55,18 @@ class HardwareModel:
     host_bytes: int = 256 * 1024**3
     flops_fp16: float = 256e12
     hbm_bw_bytes: float = 1.6e12  # HBM2e-class NPU
+    # per-token prefill compute time — the recompute a retained state
+    # snapshot saves (paper-platform scale: ~2·7e9 FLOPs/token at 55% MFU of
+    # 256 TFLOPS ≈ 1e-4 s). The simulator overrides this from its deployed
+    # model's roofline.
+    prefill_s_per_token: float = 1e-4
 
     def transfer_cost(self, nbytes: int) -> float:
         return self.pcie_latency_s + nbytes / self.pcie_bw_bytes
+
+    def recompute_cost(self, n_tokens: int) -> float:
+        """Prefill cost of recomputing an ``n_tokens`` prefix from scratch."""
+        return n_tokens * self.prefill_s_per_token
 
 
 def expected_lora_demand(probs: list[float], batch_size: float) -> float:
@@ -129,7 +138,16 @@ class CostModelScorer:
         return expected_lora_demand(probs, self._recent_batch_size)
 
     def retain_eval(self, node: Node, now: float) -> float:
-        cost = self.hw.transfer_cost(node.size_bytes)
+        if node.kind is NodeKind.STATE:
+            if not node.has_payload:
+                # hollow radix interior: nothing to retain, evict first
+                return 0.0
+            # A snapshot's retention benefit is the recompute it saves — the
+            # full-prefix prefill cost — not its (tiny, fixed) byte transfer
+            # cost: one O(1) snapshot replaces an O(n) prefix recompute.
+            cost = self.hw.recompute_cost(node.path_num_tokens())
+        else:
+            cost = self.hw.transfer_cost(node.size_bytes)
         prob = self.tree.visit_prob(node, now)
         t = max(0.0, now - node.last_access)
         decay = 1.0 - sigmoid(t / self.sigmoid_tau)

@@ -7,7 +7,10 @@ A radix/trie structure over LoRAs and KV-cache prefixes:
   adapter,
 * below each LoRA node: a radix trie of KV-cache prefixes produced by queries
   that used that LoRA. Each root→leaf path is a conversation record; siblings
-  share their parent prefix.
+  share their parent prefix. For recurrent architectures (RWKV-6, RG-LRU) the
+  prefix nodes are fixed-size **state snapshots** (:attr:`NodeKind.STATE`)
+  instead of per-token KV — same trie, same residency/eviction machinery,
+  but the payload is indivisible (see :meth:`DependencyTree._split`).
 
 Every node carries the statistics the cost model (§5.2) needs: visit
 frequency (exponentially decayed), last-recent-use time, size in blocks/bytes
@@ -41,7 +44,14 @@ TokenSeq = tuple[Token, ...]
 class NodeKind(enum.Enum):
     ROOT = "root"
     LORA = "lora"
-    KV = "kv"  # KV-cache prefix node; for SSM archs this is a state snapshot
+    KV = "kv"  # per-token KV-cache prefix node (attention archs)
+    # Recurrent-state snapshot node (RWKV / RG-LRU): the fixed-size model
+    # state at the prefix boundary this node's path ends on. Unlike KV, the
+    # payload is indivisible and lives entirely on the node whose boundary it
+    # was captured at; radix splits therefore create *hollow* STATE interiors
+    # (no blocks) that are pure trie structure — resumable boundaries are the
+    # STATE nodes with payload blocks.
+    STATE = "state"
 
 
 class Residency(enum.Enum):
@@ -86,6 +96,13 @@ class Node:
     def is_leaf(self) -> bool:
         return not self.children
 
+    @property
+    def has_payload(self) -> bool:
+        """Whether this node owns data-plane blocks in some tier. False for
+        hollow STATE interiors created by radix splits (and for dropped
+        nodes), which are structure only."""
+        return bool(self.hbm_blocks or self.host_blocks)
+
     def hbm_children(self) -> list["Node"]:
         return [c for c in self.children.values() if c.tier is Residency.HBM]
 
@@ -109,10 +126,20 @@ class Node:
         """Full token prefix from the LoRA node down to (and incl.) this node."""
         parts: list[TokenSeq] = []
         n: Optional[Node] = self
-        while n is not None and n.kind is NodeKind.KV:
+        while n is not None and n.kind in (NodeKind.KV, NodeKind.STATE):
             parts.append(n.tokens)
             n = n.parent
         return tuple(t for seg in reversed(parts) for t in seg)
+
+    def path_num_tokens(self) -> int:
+        """Length of :meth:`path_tokens` without materializing the tuple —
+        scorers call this per candidate per eviction-loop iteration."""
+        out = 0
+        n: Optional[Node] = self
+        while n is not None and n.kind in (NodeKind.KV, NodeKind.STATE):
+            out += len(n.tokens)
+            n = n.parent
+        return out
 
     # -------------------------------------------------------------- counters
     def touch(self, now: float, decay_tau: float) -> None:
@@ -150,10 +177,19 @@ class MatchResult:
 class DependencyTree:
     """The unified usage-dependency tree over LoRAs and KV prefixes."""
 
-    def __init__(self, align: int = 1, decay_tau: float = 60.0):
+    def __init__(self, align: int = 1, decay_tau: float = 60.0,
+                 block_tokens: int = 0):
         if align < 1:
             raise ValueError("align must be >= 1")
         self.align = align
+        # data-plane block quantum for KV block-ownership math. Historically
+        # equal to ``align``, but a state-caching tree runs align=1 (snapshot
+        # boundaries are arbitrary) while KV blocks are still block_tokens
+        # wide — splitting block lists at token offsets would hand a 3-token
+        # upper node 3 whole blocks. Ownership therefore always splits at
+        # block_tokens boundaries (straddling blocks stay with the lower
+        # node).
+        self.block_tokens = block_tokens or align
         self.decay_tau = decay_tau
         self.root = Node(kind=NodeKind.ROOT, lora_id=None, tokens=(), tier=None)
         self._lora_nodes: dict[str, Node] = {}
@@ -265,10 +301,18 @@ class DependencyTree:
         num_blocks: int,
         tier: Residency,
         now: float,
+        kind: NodeKind = NodeKind.KV,
     ) -> tuple[Node, int]:
         """Like :meth:`insert_kv` but also returns the number of leading
         suffix tokens absorbed by pre-existing/split nodes (their data-plane
-        blocks are redundant and should be freed by the caller)."""
+        blocks are redundant and should be freed by the caller).
+
+        ``kind=NodeKind.STATE`` inserts a state-snapshot boundary instead of
+        a KV prefix: callers insert the node as a hollow husk
+        (``size_bytes=0, num_blocks=0``) and attach the indivisible snapshot
+        payload to the *returned* node after allocating its blocks — the
+        per-token proportional size split below is meaningless for a
+        fixed-size snapshot."""
         toks = tuple(tokens)
         if not toks:
             raise ValueError("cannot insert empty KV edge")
@@ -284,7 +328,7 @@ class DependencyTree:
             existing = parent.children.get(toks[: self.align])
             if existing is None:
                 node = Node(
-                    kind=NodeKind.KV,
+                    kind=kind,
                     lora_id=parent.lora_id,
                     tokens=toks,
                     tier=tier,
@@ -310,17 +354,22 @@ class DependencyTree:
             parent = existing
             toks = toks[common:]
             absorbed += common
-            num_blocks = max(0, num_blocks - common // max(1, self.align))
+            num_blocks = max(0, num_blocks - common // self.block_tokens)
 
     def _split(self, node: Node, at: int) -> Node:
         """Split ``node``'s edge at token offset ``at``; returns the new upper
         node. Stats are copied; sizes divide proportionally (block counts are
-        re-derived by the manager for data-plane nodes)."""
+        re-derived by the manager for data-plane nodes).
+
+        STATE nodes split *hollow*: a snapshot is the full model state at the
+        node's own boundary, so there is no data for the intermediate
+        boundary — the upper node gets zero bytes/blocks (pure trie
+        structure) and the payload stays whole on the lower node."""
         assert 0 < at < len(node.tokens)
         upper_tokens, lower_tokens = node.tokens[:at], node.tokens[at:]
-        frac = at / len(node.tokens)
+        frac = 0.0 if node.kind is NodeKind.STATE else at / len(node.tokens)
         upper = Node(
-            kind=NodeKind.KV,
+            kind=node.kind,
             lora_id=node.lora_id,
             tokens=upper_tokens,
             tier=node.tier,
@@ -337,9 +386,10 @@ class DependencyTree:
         node.tokens = lower_tokens
         node.size_bytes -= upper.size_bytes
         upper.children[lower_tokens[: self.align]] = node
-        # split block ownership at the aligned boundary
-        if node.hbm_blocks or node.host_blocks:
-            nb_upper = at // self.align
+        # split block ownership at the aligned boundary (KV only: a state
+        # snapshot is indivisible and stays entirely on the lower node)
+        if node.kind is not NodeKind.STATE and (node.hbm_blocks or node.host_blocks):
+            nb_upper = at // self.block_tokens
             for attr in ("hbm_blocks", "host_blocks"):
                 blocks = getattr(node, attr)
                 if blocks:
@@ -436,7 +486,7 @@ class DependencyTree:
         invalid-KV measurements.
         """
         out = 0
-        for n in self.iter_nodes({NodeKind.KV}):
+        for n in self.iter_nodes({NodeKind.KV, NodeKind.STATE}):
             if n.tier is not Residency.HBM:
                 continue
             p = n.parent

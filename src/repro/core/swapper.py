@@ -137,15 +137,22 @@ def make_fastlibra(
     block_size: int = 32,
     hardware=None,
     variant: str = "fastlibra",
+    state_bytes: int = 0,
 ) -> tuple[CacheManager, CacheSwapper]:
     """Factory for FASTLIBRA and every paper baseline/ablation.
 
     variants: fastlibra | fastlibra-paper | wom | wos | wol | vllm | slora
     (fastlibra-paper = literal Eq.6 ordering without the density correction)
+
+    ``state_bytes > 0`` (recurrent archs) makes the prefix layer state
+    snapshots instead of per-token KV — every variant keeps its own
+    eviction/partitioning semantics over the snapshot nodes, and the
+    proactive swapper moves whole snapshots through the same SwapOp plan.
     """
     from .cache_manager import ManagerConfig
 
-    base = dict(block_size=block_size, kv_bytes_per_token=kv_bytes_per_token)
+    base = dict(block_size=block_size, kv_bytes_per_token=kv_bytes_per_token,
+                state_bytes=state_bytes)
     sw = SwapperConfig()
     if variant == "fastlibra":
         cfg = ManagerConfig(**base)

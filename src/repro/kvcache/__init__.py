@@ -1,13 +1,22 @@
 """Paged KV cache + SSM state-snapshot substrate."""
 
 from .paged import KVPoolSpec, PagedKVPool
-from .state_cache import StateCache, StateSpec, flatten_state, state_floats
+from .state_cache import (
+    StateCache,
+    StateSpec,
+    flat_state_elems,
+    flatten_state,
+    state_floats,
+    unflatten_state,
+)
 
 __all__ = [
     "KVPoolSpec",
     "PagedKVPool",
     "StateCache",
     "StateSpec",
+    "flat_state_elems",
     "flatten_state",
     "state_floats",
+    "unflatten_state",
 ]

@@ -1,20 +1,32 @@
-"""Prefix *state* caching for SSM/hybrid architectures (beyond-paper).
+"""Prefix *state* caching for SSM/hybrid architectures.
 
 RWKV-6 and RG-LRU have O(1) recurrent state instead of a per-token KV
 cache. FASTLIBRA's dependency tree generalizes directly: a KV node becomes a
 **state snapshot node** — the recurrent state at a prefix boundary. Matching
 a prefix returns the deepest snapshot; decoding resumes from it (no
 recompute), exactly like KV reuse. Snapshot nodes are fixed-size, so one
-snapshot occupies ``ceil(state_bytes / block_bytes)`` pool blocks.
+snapshot occupies ``ceil(snapshot_bytes / block_bytes)`` pool blocks.
 
-This file provides the host/device snapshot store keyed by pool block ids,
-mirroring ``PagedKVPool``'s two-tier layout.
+This is the data plane of the recurrent-state prefix-cache subsystem: the
+two-tier (HBM/host) snapshot store, block-addressed by the unified pool's
+ids, plus the flatten/unflatten helpers the engine uses to move one batch
+row of a model cache pytree in and out of the store. The control plane is
+``core.cache_manager`` (``lookup_state`` / ``commit_state``, STATE nodes in
+the dependency tree); ``serving.engine`` wires both together so RWKV/RG-LRU
+serve with history reuse.
+
+The store is parameterized on the cache dtype: a bf16 model cache snapshots
+at bf16 footprint (the earlier forced-f32 layout accounted snapshots at 2×
+their true size, distorting pool accounting). Mixed-precision cache leaves
+(e.g. RWKV's f32 ``wkv`` inside a bf16 model) are cast to the store dtype on
+flatten — bit-exact when the store dtype is the widest leaf dtype, which is
+the engine default (f32 store for the f32 CPU engine).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,12 +39,21 @@ Array = jax.Array
 class StateSpec:
     """Flattened recurrent-state snapshot layout."""
 
-    state_floats: int  # total f32 elements of one sequence's full-model state
+    state_elems: int  # elements of one sequence's full-model state snapshot
     block_bytes: int  # unified pool block size (bytes)
+    dtype: Any = jnp.float32  # snapshot storage dtype (match the cache dtype)
+
+    @property
+    def dtype_bytes(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def snapshot_bytes(self) -> int:
+        return self.state_elems * self.dtype_bytes
 
     @property
     def blocks_per_snapshot(self) -> int:
-        return -(-self.state_floats * 4 // self.block_bytes)
+        return -(-self.snapshot_bytes // self.block_bytes)
 
 
 class StateCache:
@@ -40,42 +61,109 @@ class StateCache:
 
     def __init__(self, spec: StateSpec, n_hbm_blocks: int, n_host_blocks: int):
         self.spec = spec
-        per_block = spec.block_bytes // 4
+        per_block = spec.block_bytes // spec.dtype_bytes
+        if per_block < 1:
+            raise ValueError("block_bytes smaller than one state element")
         self.per_block = per_block
-        self.hbm = jnp.zeros((n_hbm_blocks, per_block), jnp.float32)
-        self.host = np.zeros((n_host_blocks, per_block), np.float32)
+        self.hbm = jnp.zeros((n_hbm_blocks, per_block), spec.dtype)
+        self.host = np.zeros((n_host_blocks, per_block), jnp.dtype(spec.dtype))
 
     def store(self, block_ids: Sequence[int], flat_state: Array) -> None:
-        pad = len(block_ids) * self.per_block - flat_state.shape[0]
-        flat = jnp.pad(flat_state, (0, pad))
+        if not block_ids:
+            raise ValueError("cannot store a snapshot into zero blocks")
+        capacity = len(block_ids) * self.per_block
+        if flat_state.shape[0] > capacity:
+            raise ValueError(
+                f"snapshot of {flat_state.shape[0]} elements exceeds the "
+                f"{capacity}-element capacity of {len(block_ids)} blocks"
+            )
+        pad = capacity - flat_state.shape[0]
+        flat = jnp.pad(flat_state.astype(self.spec.dtype), (0, pad))
         rows = flat.reshape(len(block_ids), self.per_block)
         self.hbm = self.hbm.at[jnp.asarray(list(block_ids))].set(rows)
 
-    def load(self, block_ids: Sequence[int], n_floats: int) -> Array:
+    def load(self, block_ids: Sequence[int], n_elems: int) -> Array:
+        if n_elems > len(block_ids) * self.per_block:
+            raise ValueError(
+                f"requested {n_elems} elements from {len(block_ids)} blocks "
+                f"holding at most {len(block_ids) * self.per_block}"
+            )
         rows = jnp.take(self.hbm, jnp.asarray(list(block_ids)), axis=0)
-        return rows.reshape(-1)[:n_floats]
+        return rows.reshape(-1)[:n_elems]
 
     def swap_out(self, hbm_blocks: Sequence[int], host_blocks: Sequence[int]) -> None:
+        if not hbm_blocks:  # hollow-node op: structure moved, no payload
+            return
         self.host[list(host_blocks)] = np.asarray(
             jnp.take(self.hbm, jnp.asarray(list(hbm_blocks)), axis=0)
         )
 
     def swap_in(self, host_blocks: Sequence[int], hbm_blocks: Sequence[int]) -> None:
+        if not host_blocks:
+            return
         rows = jnp.asarray(self.host[list(host_blocks)])
         self.hbm = self.hbm.at[jnp.asarray(list(hbm_blocks))].set(rows)
 
 
-def flatten_state(cache: dict, row: int) -> Array:
-    """Flatten one batch row of a model cache pytree (minus 'len')."""
-    leaves = [v for k, v in sorted(cache.items()) if k != "len"]
-    return jnp.concatenate(
-        [jnp.ravel(l[:, row] if l.ndim > 1 else l[row]).astype(jnp.float32)
-         for l in leaves]
+def _state_items(cache: dict) -> list[tuple[str, Any]]:
+    """Deterministic (sorted-key) snapshot leaves of a cache pytree: every
+    leaf except the per-row ``len`` counter, which the engine tracks."""
+    return [(k, v) for k, v in sorted(cache.items()) if k != "len"]
+
+
+def _row_shape(leaf) -> tuple[int, ...]:
+    """Shape of one batch row of a cache leaf (batch axis is 1 for the
+    layer-stacked ``(L, B, ...)`` layout, 0 for flat ``(B,)`` leaves)."""
+    return (leaf.shape[:1] + leaf.shape[2:]) if leaf.ndim > 1 else ()
+
+
+def flat_state_elems(cache: dict) -> int:
+    """Elements of one batch row's flattened snapshot. Works on concrete
+    arrays and on ``jax.eval_shape`` structs (only shapes are read)."""
+    return sum(
+        int(np.prod(_row_shape(l), dtype=np.int64)) for _, l in _state_items(cache)
     )
 
 
-def state_floats(cfg, batch: int = 1) -> int:
-    """Size (f32 elements) of one sequence's full recurrent state."""
+def flatten_state(cache: dict, row: int, dtype=jnp.float32) -> Array:
+    """Flatten one batch row of a model cache pytree (minus 'len')."""
+    return jnp.concatenate(
+        [jnp.ravel(l[:, row] if l.ndim > 1 else l[row]).astype(dtype)
+         for _, l in _state_items(cache)]
+    )
+
+
+def unflatten_state(cache: dict, row: int, flat: Array) -> dict:
+    """Inverse of :func:`flatten_state`: write ``flat`` back into ``row`` of
+    every snapshot leaf (casting to each leaf's dtype) and return the new
+    cache pytree. ``cache['len']`` is left untouched — the engine sets it to
+    the snapshot's prefix boundary separately."""
+    expected = flat_state_elems(cache)
+    if flat.shape[0] != expected:
+        raise ValueError(
+            f"snapshot of {flat.shape[0]} elements does not match the "
+            f"{expected}-element cache row layout"
+        )
+    out = dict(cache)
+    off = 0
+    for k, leaf in _state_items(cache):
+        shape = _row_shape(leaf)
+        n = int(np.prod(shape, dtype=np.int64))
+        seg = flat[off : off + n].reshape(shape).astype(leaf.dtype)
+        out[k] = leaf.at[:, row].set(seg) if leaf.ndim > 1 else leaf.at[row].set(seg)
+        off += n
+    return out
+
+
+def state_floats(cfg, batch: int = 1, window: int | None = None) -> int:
+    """Element count of one sequence's full recurrent-state snapshot.
+
+    (Historical name; the count is dtype-agnostic — multiply by the store
+    dtype's width for bytes.) For RG-LRU hybrids the snapshot must also
+    carry the sliding-window K/V of the local-attention layers (``window``
+    tokens, default ``cfg.window_size``), or a resumed prefix would attend
+    into a zeroed window.
+    """
     if cfg.rwkv is not None:
         hd = cfg.rwkv.head_dim
         H = cfg.d_model // hd
@@ -86,6 +174,10 @@ def state_floats(cfg, batch: int = 1) -> int:
         n_rec = sum(
             1 for i in range(cfg.num_layers) if pat[i % len(pat)] == "rec"
         )
+        n_attn = cfg.num_layers - n_rec
         w = cfg.rglru.lru_width or cfg.d_model
-        return n_rec * (w + (cfg.rglru.conv_width - 1) * w)
+        rec = n_rec * (w + (cfg.rglru.conv_width - 1) * w)
+        win = window if window is not None else (cfg.window_size or 0)
+        attn = 2 * n_attn * win * cfg.num_kv_heads * cfg.resolved_head_dim
+        return rec + attn
     raise ValueError("state caching applies to SSM/hybrid archs only")

@@ -8,6 +8,12 @@ block allocation; this engine is its data plane:
 * matched prefix nodes → ``PagedKVPool.gather`` into the dense running cache,
 * newly computed suffixes → ``PagedKVPool.scatter`` into pool blocks at
   commit (paper: "new KVs are retained in HBM directly"),
+* recurrent layouts (RWKV / RG-LRU): the prefix cache is the state-snapshot
+  subsystem instead — a matched STATE node seeds the slot's recurrent state
+  row via ``StateCache.load``/``unflatten_state`` so prefill covers only the
+  un-snapshotted suffix, and prefill captures the state at ``len(prompt)-1``
+  (chunks are clamped to land on the boundary) for ``commit_state`` to fold
+  into the same unified pool,
 * swap ops from the performance-driven swapper → physical host↔device copies
   (``PagedKVPool.swap_in/out``) and adapter slot loads (:class:`AdapterStore`),
 * dependency-tree bookkeeping (lookup → admit → pin → commit → unpin).
@@ -38,8 +44,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import CacheManager, CacheSwapper, NodeKind, SwapKind, make_fastlibra
-from ..kvcache import KVPoolSpec, PagedKVPool
+from ..core import CacheManager, CacheSwapper, NodeKind, Residency, SwapKind, make_fastlibra
+from ..kvcache import (
+    KVPoolSpec,
+    PagedKVPool,
+    StateCache,
+    StateSpec,
+    flat_state_elems,
+    flatten_state,
+    unflatten_state,
+)
 from ..lora import AdapterStore
 from ..models import build_model
 from .metrics import ServingReport, summarize
@@ -49,9 +63,11 @@ from .scheduler import TokenBudgetController, plan_step
 
 
 def _default_schedule_mode() -> str:
-    # CI's non-blocking sweep flips the default via env without touching
-    # every test's EngineConfig construction.
-    return os.environ.get("REPRO_SCHEDULE_MODE", "alternate")
+    # "mixed" is the engine default (the ROADMAP burn-in criterion was met:
+    # the CI sweep is stable and now runs blocking); "alternate" survives as
+    # the ablation pin. The env override lets CI pin either mode without
+    # touching every test's EngineConfig construction.
+    return os.environ.get("REPRO_SCHEDULE_MODE", "mixed")
 
 
 @dataclasses.dataclass
@@ -102,6 +118,12 @@ class EngineConfig:
 
 class ServingEngine:
     def __init__(self, model_cfg, config: EngineConfig, key=None):
+        if config.schedule_mode not in ("mixed", "alternate"):
+            # step() branches on == "mixed" with a bare else: a typo (or a
+            # bad REPRO_SCHEDULE_MODE) must not silently run alternate mode
+            raise ValueError(
+                f"schedule_mode must be 'mixed' or 'alternate', "
+                f"got {config.schedule_mode!r}")
         self.cfg = config
         self.model_cfg = model_cfg
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -125,21 +147,64 @@ class ServingEngine:
             use_v=model_cfg.mla is None,
         )
         self.kv_spec = spec
+        # recurrent layouts (RWKV / RG-LRU hybrid) carry fixed-size state
+        # snapshots instead of a per-token dense KV: their prefix cache is
+        # the state-snapshot subsystem (kvcache/state_cache.py + STATE nodes
+        # in the dependency tree), sized from the actual cache row layout
+        self._kv_reusable = model_cfg.rwkv is None and model_cfg.rglru is None
+        self._state_reusable = not self._kv_reusable
+        B, T = config.max_batch_slots, config.max_seq_len
+        state_bytes = 0
+        if self._state_reusable:
+            cache_shapes = jax.eval_shape(lambda: self.model.init_cache(B, T))
+            self.state_spec = StateSpec(
+                state_elems=flat_state_elems(cache_shapes),
+                block_bytes=config.block_size * spec.bytes_per_token,
+                dtype=jnp.float32,  # engine cache dtype (widest leaf)
+            )
+            state_bytes = self.state_spec.snapshot_bytes
         self.manager, self.swapper = make_fastlibra(
             config.hbm_bytes,
             config.host_bytes,
             kv_bytes_per_token=spec.bytes_per_token,
             block_size=config.block_size,
             variant=config.variant,
+            state_bytes=state_bytes,
         )
         pool_blocks = self.manager.kv_pool.num_hbm_blocks
         host_blocks = self.manager.kv_pool.num_host_blocks
-        self.kv_pool = PagedKVPool(spec, pool_blocks, host_blocks)
+        if self._state_reusable:
+            # one data plane per layout: snapshots for recurrent archs (the
+            # paged per-token pool would be dead weight)
+            self.kv_pool = None
+            self.state_cache = StateCache(self.state_spec, pool_blocks, host_blocks)
+            # jitted row seed/reset/capture: these sit on every admission's
+            # critical path (TTFT), where the eager per-leaf dispatch chain
+            # costs more than the snapshot saves at small scales. Shapes are
+            # engine constants (blocks_per_snapshot, state_elems), so each
+            # compiles exactly once.
+            n_elems = self.state_spec.state_elems
+            sdtype = self.state_spec.dtype
+
+            def _seed(cache, hbm, blocks, row):
+                flat = jnp.take(hbm, blocks, axis=0).reshape(-1)[:n_elems]
+                return unflatten_state(cache, row, flat)
+
+            def _reset(cache, row):
+                return unflatten_state(
+                    cache, row, jnp.zeros((n_elems,), sdtype))
+
+            self._state_seed_fn = jax.jit(_seed)
+            self._state_reset_fn = jax.jit(_reset)
+            self._state_flatten_fn = jax.jit(
+                lambda cache, row: flatten_state(cache, row, dtype=sdtype))
+        else:
+            self.kv_pool = PagedKVPool(spec, pool_blocks, host_blocks)
+            self.state_cache = None
         self.adapters = AdapterStore(
             self.model, model_cfg.lora.max_adapters, key=k2
         )
         # dense running cache: fixed decode slots
-        B, T = config.max_batch_slots, config.max_seq_len
         self.cache = self.model.init_cache(B, T)
         self._slot_req: list[Optional[Request]] = [None] * B
         self._free_slots = deque(range(B))
@@ -159,10 +224,6 @@ class ServingEngine:
             self.model, make_buckets(config.prefill_min_bucket, chunk)
         )
         self._prefill_chunk = chunk
-        # recurrent layouts (RWKV / RG-LRU hybrid) carry state snapshots, not
-        # a per-token dense KV that the paged pool can gather/scatter — they
-        # serve with cold prefixes (no history-KV reuse) for now.
-        self._kv_reusable = model_cfg.rwkv is None and model_cfg.rglru is None
         self.budget_ctl = TokenBudgetController(
             max_budget=max(config.step_token_budget, B + 1),
             target_step_ms=config.target_step_ms,
@@ -192,9 +253,7 @@ class ServingEngine:
         self._budget_used = 0
         self._budget_avail = 0
         self._batch_tokens.clear()
-        self.budget_ctl.ema_ms = 0.0
-        self.budget_ctl.steps = 0
-        self.budget_ctl._budget = float(self.budget_ctl.max_budget)
+        self.budget_ctl.reset()
         # wall-clock baseline for throughput_qps and fresh hit-rate
         # counters — without these, post-reset reports span the warm-up
         self._epoch = self._now()
@@ -228,6 +287,7 @@ class ServingEngine:
             self.finished,
             wall,
             kv_hit_rate=self.manager.stats.kv_hit_rate(),
+            state_hit_rate=self.manager.stats.state_hit_rate(),
             lora_hit_rate=self.manager.stats.lora_hit_rate(),
             invalid_kv_fraction=self.manager.invalid_kv_fraction(),
             hbm_utilization=self.manager.hbm_usage(),
@@ -290,16 +350,36 @@ class ServingEngine:
             # padding every decode token to the smallest prefill bucket
             n = self._decode_once()
             return n, n, budget
-        transitioned = self._run_chunks(
-            {r.slot: r for r in prefill_rows}, plan.prefill_chunks,
-            decode_rows)
+        by_slot = {r.slot: r for r in prefill_rows}
+        chunks = dict(plan.prefill_chunks)
+        clipped = self._clamp_state_chunks(chunks, by_slot)
+        transitioned = self._run_chunks(by_slot, chunks, decode_rows)
         # catch-up decode: rows that completed prefill THIS step get their
         # second token from one S=1 dispatch, matching the per-request step
         # cadence of alternate mode (whose separate decode call picks fresh
         # rows up in the same step) — without it every request pays one
         # extra engine step at the prefill→decode transition
         catchup = self._decode_once(transitioned) if transitioned else 0
-        return plan.tokens + catchup, plan.tokens, budget
+        tokens = plan.tokens - clipped
+        return tokens + catchup, tokens, budget
+
+    def _clamp_state_chunks(self, chunks: dict[int, int],
+                            by_slot: dict[int, Request]) -> int:
+        """Recurrent layouts: a chunk may not stride across a row's snapshot
+        boundary — the state must be observable at exactly
+        ``state_capture_at`` for :meth:`_run_chunks` to capture it (the
+        recurrence is destructive; an intermediate state cannot be recovered
+        later). Shrinks chunks in place; returns the clipped token count."""
+        if not self._state_reusable:
+            return 0
+        clipped = 0
+        for s, c in list(chunks.items()):
+            r = by_slot[s]
+            q = r.state_capture_at
+            if r.staged_state is None and r.prefill_pos < q < r.prefill_pos + c:
+                chunks[s] = q - r.prefill_pos
+                clipped += c - chunks[s]
+        return clipped
 
     def _run_chunks(self, by_slot: dict[int, Request],
                     chunks: dict[int, int],
@@ -336,6 +416,13 @@ class ServingEngine:
             r = by_slot[s]
             r.prefill_pos += c
             r.prefill_chunks += 1
+            if (self._state_reusable and r.staged_state is None
+                    and r.prefill_pos == r.state_capture_at):
+                # the row's recurrence now sits exactly at the snapshot
+                # boundary (chunks were clamped to land here): capture the
+                # flat state, staged until commit folds it into the pool
+                r.staged_state = self._state_flatten_fn(
+                    self.cache, jnp.asarray(s, jnp.int32))
             if r.prefill_pos >= len(r.prompt):
                 r.phase = Phase.DECODE
                 r.generated.append(int(toks[r.slot]))
@@ -352,16 +439,28 @@ class ServingEngine:
             now = self._now()
             # match against prompt[:-1]: the last token is always recomputed
             # so prefill yields logits for it (vLLM semantics). Recurrent
-            # layouts look up an empty history (cold prefix, LoRA still
-            # tracked) — their state is not pool-gatherable.
-            history = req.prompt[:-1] if self._kv_reusable else ()
-            lk = self.manager.lookup(req.adapter_id, history, now)
+            # layouts match state-snapshot boundaries instead of per-token KV
+            # — the resumable prefix is the deepest payload snapshot.
+            history = req.prompt[:-1]
+            if self._state_reusable:
+                lk = self.manager.lookup_state(req.adapter_id, history, now)
+                matched = lk.state_tokens
+            else:
+                lk = self.manager.lookup(req.adapter_id, history, now)
+                matched = lk.match.matched_tokens
             adm = self.manager.admit(lk, now)
             if adm.queued:
                 self._execute_swaps(self.manager.drain_ops())
                 break  # HBM saturated; retry next step
-            suffix_len = len(req.prompt) - lk.match.matched_tokens
-            total_new = suffix_len + req.max_new_tokens
+            if self._state_reusable:
+                # recurrent running memory is ONE fixed-size state row, not
+                # per-token KV: reserve a single snapshot's blocks as the
+                # admission throttle. Per-token phantom blocks would evict
+                # real snapshots from the same pool to back bytes that the
+                # architecture never allocates.
+                total_new = self.manager.config.state_blocks * self.cfg.block_size
+            else:
+                total_new = len(req.prompt) - matched + req.max_new_tokens
             blocks = self.manager.allocate_running(req.request_id, total_new, now)
             if blocks is None:
                 self.manager.unpin(adm.pinned)
@@ -374,7 +473,7 @@ class ServingEngine:
             self.waiting.popleft()
             req.lookup = lk
             req.pinned = adm.pinned
-            req.matched_tokens = lk.match.matched_tokens
+            req.matched_tokens = matched
             req.hbm_hit_tokens = lk.hbm_hit_tokens
             req.admit_time = t0
             req.slot = self._free_slots.popleft()
@@ -388,12 +487,15 @@ class ServingEngine:
         eager mode runs the whole suffix immediately at its exact shape."""
         slot = req.slot
         m = req.lookup.match
-        prefix_len = m.matched_tokens
-        # load matched prefix KV from pool blocks into the dense cache
-        if prefix_len > 0:
-            block_ids = [b for n in m.kv_nodes for b in n.hbm_blocks]
-            k, v = self.kv_pool.gather(block_ids)
-            self._write_dense(slot, 0, k, v)
+        if self._state_reusable:
+            prefix_len = self._seed_state_row(req)
+        else:
+            prefix_len = m.matched_tokens
+            # load matched prefix KV from pool blocks into the dense cache
+            if prefix_len > 0:
+                block_ids = [b for n in m.kv_nodes for b in n.hbm_blocks]
+                k, v = self.kv_pool.gather(block_ids)
+                self._write_dense(slot, 0, k, v)
         # ensure adapter slot present
         aid = self.adapters.slot_of(req.adapter_id)
         if aid is None:
@@ -405,22 +507,61 @@ class ServingEngine:
         else:
             req.phase = Phase.PREFILLING
 
-    def _prefill_eager(self, req: Request) -> None:
-        """Seed path: one exact-shape ``model.extend`` over the full suffix
-        (one XLA compile per distinct suffix length). Kept as the
-        correctness pin and ablation baseline for the bucketed subsystem."""
+    def _seed_state_row(self, req: Request) -> int:
+        """Recurrent layouts: reset the slot's carried state (the dense row
+        still holds the previous occupant's recurrence) and, on a snapshot
+        hit, seed it from the pool so prefill covers only the un-snapshotted
+        suffix. Also decides the capture boundary: ``len(prompt) - 1``, so an
+        identical repeat matches the snapshot against ``prompt[:-1]`` and
+        still recomputes its last token for first-token logits. Returns the
+        resume boundary (0 = cold prefix)."""
         slot = req.slot
-        prefix_len = req.prefill_pos
-        suffix = jnp.asarray(req.prompt[prefix_len:], jnp.int32)[None, :]
-        start = jnp.asarray(self.cache["len"])
-        ids = self._adapter_ids()
-        single = {k: v for k, v in self.cache.items()}
-        logits, new_cache = self.model.extend(
-            self.params, single, self._pad_rows(suffix, slot),
-            start, lora=self.adapters.slots, adapter_ids=ids,
-        )
-        # only this slot's rows advanced meaningfully; fix other rows' len
-        self._merge_cache(new_cache, rows=[slot])
+        row = jnp.asarray(slot, jnp.int32)
+        prefix_len = 0
+        snode = req.lookup.state_node
+        if (snode is not None and snode.tier is Residency.HBM
+                and snode.hbm_blocks):
+            # seeding writes every snapshot leaf of the row, so it doubles
+            # as the reset of the previous occupant's carried state
+            self.cache = self._state_seed_fn(
+                self.cache, self.state_cache.hbm,
+                jnp.asarray(snode.hbm_blocks, jnp.int32), row)
+            prefix_len = req.lookup.state_tokens
+        else:
+            self.cache = self._state_reset_fn(self.cache, row)
+        req.matched_tokens = prefix_len
+        q = len(req.prompt) - 1
+        req.state_capture_at = q if q > prefix_len else -1
+        return prefix_len
+
+    def _prefill_eager(self, req: Request) -> None:
+        """Seed path: exact-shape ``model.extend`` over the full suffix (one
+        XLA compile per distinct suffix length). Kept as the correctness pin
+        and ablation baseline for the bucketed subsystem. Recurrent layouts
+        with a pending snapshot boundary run the suffix as two spans split at
+        the boundary, capturing the state in between (the recurrence is
+        destructive — there is no recovering an interior state afterwards)."""
+        slot = req.slot
+        spans = [(req.prefill_pos, len(req.prompt))]
+        q = req.state_capture_at
+        if (self._state_reusable and req.staged_state is None
+                and req.prefill_pos < q):
+            spans = [(req.prefill_pos, q), (q, len(req.prompt))]
+        logits = None
+        for lo, hi in spans:
+            suffix = jnp.asarray(req.prompt[lo:hi], jnp.int32)[None, :]
+            start = jnp.asarray(self.cache["len"])
+            ids = self._adapter_ids()
+            single = {k: v for k, v in self.cache.items()}
+            logits, new_cache = self.model.extend(
+                self.params, single, self._pad_rows(suffix, slot),
+                start, lora=self.adapters.slots, adapter_ids=ids,
+            )
+            # only this slot's rows advanced meaningfully; fix other rows' len
+            self._merge_cache(new_cache, rows=[slot])
+            if hi == q and req.staged_state is None:
+                req.staged_state = self._state_flatten_fn(
+                    self.cache, jnp.asarray(slot, jnp.int32))
         req.prefill_pos = len(req.prompt)
         req.phase = Phase.DECODE
         tok = int(jnp.argmax(logits[slot, -1]))
@@ -443,6 +584,7 @@ class ServingEngine:
             return 0
         chunks = {r.slot: min(len(r.prompt) - r.prefill_pos, self._prefill_chunk)
                   for r in rows}
+        self._clamp_state_chunks(chunks, {r.slot: r for r in rows})
         self._run_chunks({r.slot: r for r in rows}, chunks, [])
         return sum(chunks.values())
 
@@ -495,10 +637,20 @@ class ServingEngine:
     def _commit(self, req: Request, now: float) -> None:
         """Scatter the request's new KV into its running blocks and fold them
         into the dependency tree."""
-        if not self._kv_reusable:
+        if self._state_reusable:
             # recurrent state is not per-token pool KV: release the running
-            # blocks instead of folding unmatchable history into the tree
+            # blocks and fold the staged boundary snapshot (if any) into the
+            # unified pool as a STATE node instead
             self.manager.abort_running(req.request_id)
+            if req.staged_state is not None:
+                node = self.manager.commit_state(
+                    req.adapter_id, req.prompt[: req.state_capture_at], now)
+                # demand evictions that freed the snapshot's blocks must hit
+                # the data plane BEFORE the store overwrites those rows
+                self._execute_swaps(self.manager.drain_ops())
+                if node is not None:
+                    self.state_cache.store(node.hbm_blocks, req.staged_state)
+                req.staged_state = None
             self.manager.unpin(req.pinned)
             return
         m = req.lookup.match
@@ -526,6 +678,16 @@ class ServingEngine:
                     self.adapters.unload(op.lora_id)
                 if req is not None and op.kind is SwapKind.SWAP_IN:
                     req.lora_coldstart += self._now() - t0
+            elif op.node_kind is NodeKind.STATE:
+                # whole-snapshot moves through the two-tier StateCache;
+                # cold-start accounting mirrors the KV layouts
+                if op.kind is SwapKind.SWAP_IN:
+                    self.state_cache.swap_in(op.src_blocks, op.dst_blocks)
+                    if req is not None:
+                        req.kv_coldstart += self._now() - t0
+                elif op.kind is SwapKind.SWAP_OUT:
+                    self.state_cache.swap_out(op.src_blocks, op.dst_blocks)
+                # DROP: nothing physical to do
             else:
                 if op.kind is SwapKind.SWAP_IN:
                     self.kv_pool.swap_in(op.src_blocks, op.dst_blocks)

@@ -32,6 +32,9 @@ class ServingReport:
     avg_step_ms: float = 0.0  # mean measured engine-step wall time
     ema_step_ms: float = 0.0  # TokenBudgetController's latency EMA
     budget_utilization: float = 0.0  # mixed-batch tokens / step budget
+    # recurrent-state prefix cache (kvcache/state_cache.py): token-weighted
+    # snapshot hit rate, symmetric with kv_hit_rate for KV layouts
+    state_hit_rate: float = 0.0
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -58,6 +61,7 @@ def summarize(
     avg_step_ms: float = 0.0,
     ema_step_ms: float = 0.0,
     budget_utilization: float = 0.0,
+    state_hit_rate: float = 0.0,
 ) -> ServingReport:
     reqs = [r for r in finished if r.ttft is not None]
     ttfts = [r.ttft for r in reqs]
@@ -83,4 +87,5 @@ def summarize(
         avg_step_ms=avg_step_ms,
         ema_step_ms=ema_step_ms,
         budget_utilization=budget_utilization,
+        state_hit_rate=state_hit_rate,
     )

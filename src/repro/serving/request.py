@@ -42,6 +42,12 @@ class Request:
     # token to prefill, and how many batched chunks this request rode in
     prefill_pos: int = 0
     prefill_chunks: int = 0
+    # recurrent-state snapshot bookkeeping: the prefix boundary to capture a
+    # snapshot at (len(prompt)-1 so an identical repeat can resume and still
+    # recompute its last token for logits; -1 = no capture), and the
+    # captured flat state staged until commit folds it into the pool
+    state_capture_at: int = -1
+    staged_state: object = None
 
     @property
     def ttft(self) -> Optional[float]:

@@ -131,6 +131,15 @@ class TokenBudgetController:
     def budget(self) -> int:
         return int(round(self._budget))
 
+    def reset(self) -> None:
+        """Forget the latency EMA and re-pin the budget to ``max_budget`` —
+        benchmark warm-up boundaries call this via ``engine.reset_metrics``
+        so steady-state measurements start from the controller's init
+        state."""
+        self.ema_ms = 0.0
+        self.steps = 0
+        self._budget = float(self.max_budget)
+
     def observe(self, step_ms: float) -> None:
         self.steps += 1
         if self.steps == 1:

@@ -55,6 +55,20 @@ class DeployedModel:
     def kv_bytes_per_token(self) -> int:
         return self.cfg.kv_bytes_per_token(self.npu.dtype_bytes)
 
+    @property
+    def is_recurrent(self) -> bool:
+        return self.cfg.rwkv is not None or self.cfg.rglru is not None
+
+    @property
+    def state_snapshot_bytes(self) -> int:
+        """Bytes of one full-model recurrent-state snapshot (0 for attention
+        archs) at the deployment dtype — the STATE-node payload size."""
+        if not self.is_recurrent:
+            return 0
+        from ..kvcache.state_cache import state_floats
+
+        return state_floats(self.cfg) * self.npu.dtype_bytes
+
     def hbm_pool_bytes(self, activation_reserve: float = 0.1) -> int:
         """HBM available for the unified LoRA+KV pool after weights."""
         total = self.npu.hbm_bytes * self.cards

@@ -133,6 +133,7 @@ class SimResult:
             "avg_lora_cold": self.avg_lora_coldstart,
             "avg_kv_cold": self.avg_kv_coldstart,
             "kv_hit_rate": s.kv_hit_rate(),
+            "state_hit_rate": s.state_hit_rate(),
             "lora_hit_rate": s.lora_hit_rate(),
             "avg_invalid_kv": statistics.fmean(inv),
             "avg_hbm_usage": statistics.fmean(hbm),
@@ -161,7 +162,13 @@ class ServingSimulator:
             hbm_bytes=pool_bytes,
             host_bytes=deployed.npu.host_bytes,
             flops_fp16=deployed.npu.flops_fp16 * deployed.cards,
+            # the recompute a retained snapshot saves, from the same roofline
+            # that prices this model's prefill iterations
+            prefill_s_per_token=deployed.prefill_time(1, 0),
         )
+        # recurrent archs: the prefix layer is state snapshots, and TTFT is
+        # snapshot-aware — a matched boundary shrinks the prefill suffix
+        self._state_mode = deployed.is_recurrent
         self.manager, self.swapper = make_fastlibra(
             pool_bytes,
             deployed.npu.host_bytes,
@@ -169,6 +176,7 @@ class ServingSimulator:
             block_size=self.cfg.block_size,
             hardware=hw_model,
             variant=self.cfg.variant,
+            state_bytes=deployed.state_snapshot_bytes,
         )
         # register every LoRA in the trace (host-resident at t=0)
         for lid in sorted({q.lora_id for q in trace}):
@@ -266,14 +274,25 @@ class ServingSimulator:
             while waiting and len(running) + len(pending) < cfg.max_batch:
                 r = waiting[0]
                 q = r.query
-                lk = self.manager.lookup(q.lora_id, q.prompt[:-1], now)
+                if self._state_mode:
+                    lk = self.manager.lookup_state(q.lora_id, q.prompt[:-1], now)
+                    matched = lk.state_tokens
+                else:
+                    lk = self.manager.lookup(q.lora_id, q.prompt[:-1], now)
+                    matched = lk.match.matched_tokens
                 adm = self.manager.admit(lk, now)
                 if adm.queued:
                     self._execute_ops(self.manager.drain_ops(), now)
                     break
                 # lazy allocation (vLLM semantics): prefill blocks now, decode
-                # blocks one iteration at a time (stall when HBM is full)
-                need = len(q.prompt) - lk.match.matched_tokens
+                # blocks one iteration at a time (stall when HBM is full).
+                # Recurrent state is O(1) per request: reserve one snapshot's
+                # blocks instead of phantom per-token KV.
+                if self._state_mode:
+                    need = (self.manager.config.state_blocks
+                            * self.cfg.block_size)
+                else:
+                    need = len(q.prompt) - matched
                 blocks = self.manager.allocate_running(r.rid, need, now)
                 if blocks is None:
                     self.manager.unpin(adm.pinned)
@@ -282,7 +301,7 @@ class ServingSimulator:
                 waiting.popleft()
                 r.lookup = lk
                 r.pinned = adm.pinned
-                r.matched_tokens = lk.match.matched_tokens
+                r.matched_tokens = matched
                 r.hbm_hit_tokens = lk.hbm_hit_tokens
                 r.admit_time = now
                 r.queue_time = now - q.arrival
@@ -375,8 +394,10 @@ class ServingSimulator:
                         pass
                     else:
                         # decode KV growth is allocated lazily; a full pool
-                        # stalls the request this iteration (TPOT grows)
-                        got = self.manager.allocate_running(r.rid, 1, now)
+                        # stalls the request this iteration (TPOT grows).
+                        # Recurrent decode consumes no extra memory.
+                        got = ([] if self._state_mode else
+                               self.manager.allocate_running(r.rid, 1, now))
                         if got is None:
                             stalled.append(r)
                             continue
@@ -384,7 +405,15 @@ class ServingSimulator:
                         any_progress = True
                     if r.tokens_done >= r.query.output_len:
                         r.finish_time = now
-                        self.manager.commit(r.rid, r.lookup, r.query.full, now)
+                        if self._state_mode:
+                            # fold a snapshot at the len(prompt)-1 boundary
+                            # (mirrors the engine's capture point) instead of
+                            # per-token KV; running blocks just release
+                            self.manager.abort_running(r.rid)
+                            self.manager.commit_state(
+                                r.query.lora_id, r.query.prompt[:-1], now)
+                        else:
+                            self.manager.commit(r.rid, r.lookup, r.query.full, now)
                         self.manager.unpin(r.pinned)
                         finished.append(r)
                     else:

@@ -107,7 +107,8 @@ mixed_op_st = st.one_of(
 def _check_breakdown(mgr, hbm_bytes):
     """hbm_breakdown totals: categories never exceed the pool capacity."""
     bd = mgr.hbm_breakdown()
-    used = bd["lora_bytes"] + bd["history_kv_bytes"] + bd["running_kv_bytes"]
+    used = (bd["lora_bytes"] + bd["history_kv_bytes"]
+            + bd["state_snapshot_bytes"] + bd["running_kv_bytes"])
     assert used <= bd["total_bytes"], bd
     assert bd["total_bytes"] <= hbm_bytes, bd
 
@@ -182,6 +183,105 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
         _check_breakdown(mgr, hbm_bytes)
     for n in mgr.tree.iter_nodes():
         assert n.ref_count == 0
+    assert mgr.invalid_kv_fraction() == 0.0
+
+
+# I7: recurrent-state snapshot nodes (NodeKind.STATE) interleaved with LoRA
+# and KV ops in ONE unified pool — snapshots are fixed-size and indivisible,
+# radix splits leave hollow interiors carrying nothing, and the pool /
+# validity / breakdown invariants must hold across arbitrary
+# lookup_state/admit/commit_state/evict/swap interleavings. KV branches live
+# under LoRAs "a"/"b" and snapshot branches under "c"/"d" (one cache layout
+# per adapter deployment — the trie/eviction machinery is shared).
+state_mixed_op_st = st.one_of(
+    st.tuples(st.just("kv"), st.sampled_from(["a", "b"]), tokens_st,
+              st.integers(1, 12)),
+    st.tuples(st.just("snap"), st.sampled_from(["c", "d"]), tokens_st),
+    st.tuples(st.just("slookup"), st.sampled_from(["c", "d"]), tokens_st),
+    st.tuples(st.just("tick"), st.floats(0.1, 5.0), st.floats(0.0, 24.0)),
+)
+
+STATE_BYTES = 2 * BLOCK_BYTES  # one snapshot = 2 unified-pool blocks
+
+
+@given(st.lists(state_mixed_op_st, min_size=1, max_size=40),
+       st.integers(10, 32))
+@settings(max_examples=100, deadline=None)
+def test_state_nodes_interleaved_with_kv_and_lora_ops(ops, hbm_blocks):
+    hbm_bytes = hbm_blocks * BLOCK_BYTES
+    mgr, sw = make_fastlibra(
+        hbm_bytes=hbm_bytes,
+        host_bytes=128 * BLOCK_BYTES,
+        kv_bytes_per_token=KVB,
+        block_size=BS,
+        state_bytes=STATE_BYTES,
+    )
+    for lid in "abcd":
+        mgr.register_lora(lid, BLOCK_BYTES, now=0.0)
+    now = 1.0
+    qid = 0
+    for op in ops:
+        now += 0.05
+        if op[0] == "kv":
+            _, lid, toks, new_toks = op
+            lk = mgr.lookup(lid, toks, now)
+            adm = mgr.admit(lk, now)
+            if adm.queued:
+                mgr.drain_ops()
+            else:
+                qid += 1
+                need = len(toks) - lk.match.matched_tokens + new_toks
+                blocks = mgr.allocate_running(f"s{qid}", need, now)
+                if blocks is None:
+                    mgr.abort_running(f"s{qid}")
+                else:
+                    full = tuple(toks) + tuple(
+                        range(100 + qid * 50, 100 + qid * 50 + new_toks))
+                    mgr.commit(f"s{qid}", lk, full, now)
+                mgr.unpin(adm.pinned)
+        elif op[0] == "snap" and op[2]:
+            _, lid, toks = op
+            lk = mgr.lookup_state(lid, toks, now)
+            adm = mgr.admit(lk, now)
+            if adm.queued:
+                mgr.drain_ops()
+            else:
+                # an admitted query captures a snapshot at its full boundary
+                node = mgr.commit_state(lid, toks, now)
+                if node is not None:
+                    assert node.has_payload
+                    assert node.num_blocks == mgr.config.state_blocks
+                mgr.unpin(adm.pinned)
+        elif op[0] == "slookup":
+            _, lid, toks = op
+            lk = mgr.lookup_state(lid, toks, now)
+            # a resumable snapshot is never a hollow interior
+            if lk.state_node is not None:
+                assert lk.state_node.has_payload
+                assert 0 < lk.state_tokens <= len(toks)
+            adm = mgr.admit(lk, now)
+            if not adm.queued:
+                if lk.state_node is not None:
+                    from repro.core import Residency as R
+                    assert lk.state_node.tier is R.HBM  # admit swapped it in
+                mgr.unpin(adm.pinned)
+            mgr.drain_ops()
+        elif op[0] == "tick":
+            sw.observe_batch_size(op[2])
+            sw.tick(now + op[1])
+            mgr.drain_ops()
+        mgr.check_invariants()
+        _check_breakdown(mgr, hbm_bytes)
+    # terminal structure: no pins; snapshot payloads are whole (exactly
+    # state_blocks in exactly one tier) and hollow interiors own nothing
+    for n in mgr.tree.iter_nodes():
+        assert n.ref_count == 0
+        if n.kind is NodeKind.STATE:
+            if n.has_payload:
+                assert not (n.hbm_blocks and n.host_blocks)
+                assert len(n.hbm_blocks or n.host_blocks) == mgr.config.state_blocks
+            else:
+                assert n.num_blocks == 0 or n.tier is None
     assert mgr.invalid_kv_fraction() == 0.0
 
 
