@@ -1,0 +1,23 @@
+"""libra-check static layer: a JAX-aware AST lint pass over the repo.
+
+``python -m repro.analysis.lint src/`` runs every registered rule over the
+tree and exits non-zero on violations (CI runs it as a blocking job). Rules
+target the hazards that silently destroy a JAX serving engine's latency
+wins or strip its safety net:
+
+* ``traced-branch``     — Python control flow on traced values inside jit
+* ``host-sync``         — device→host syncs reachable from the engine step loop
+* ``nonstatic-jit-arg`` — jit signatures that recompile per Python value
+* ``bare-assert``       — ``assert`` on mutation paths (vanishes under -O)
+* ``dict-order-tiebreak`` — min/max scheduling decisions whose ties resolve
+  by dict/insertion order
+
+This package is stdlib-only (no jax import) so the lint job needs no
+accelerator toolchain. See :mod:`repro.analysis.registry` for how to add a
+rule and ``README.md`` for the suppression syntax
+(``# libra: ignore[<rule-id>]``).
+"""
+
+from .registry import Rule, Violation, all_rules, register
+
+__all__ = ["Rule", "Violation", "all_rules", "register"]

@@ -1,0 +1,359 @@
+"""JAX-aware lint rules: tracer leaks, host syncs, recompile storms.
+
+All three rules are first-order static approximations (documented per rule);
+they are tuned to this codebase's idioms — ``@partial(jax.jit, ...)``
+decorated kernels, ``self._fn = jax.jit(self._method)`` engine entry points
+— and err toward silence on constructs they cannot resolve. A false
+negative costs a missed review comment; a false positive costs a suppression
+with a justification, so precision wins.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from .registry import (
+    ModuleInfo,
+    ProjectContext,
+    Violation,
+    const_str_elems,
+    dotted_name,
+    register,
+)
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+# attribute reads on a traced array that yield static Python values — safe
+# to branch on inside jit
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_JNP_ROOTS = ("jnp", "jax")
+
+
+@dataclasses.dataclass
+class JittedFn:
+    fn: ast.FunctionDef
+    static_names: set[str]
+    jit_site_line: int  # where the jax.jit wrapping happens
+
+
+def _jit_call_statics(call: ast.Call, params: list[str]) -> set[str]:
+    """static_argnames/static_argnums of a ``jax.jit(...)``-style call,
+    resolved to parameter names."""
+    out: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            out.update(const_str_elems(kw.value))
+        elif kw.arg == "static_argnums":
+            nums = []
+            if isinstance(kw.value, ast.Constant) and isinstance(kw.value.value, int):
+                nums = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                nums = [
+                    e.value
+                    for e in kw.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                ]
+            for i in nums:
+                if 0 <= i < len(params):
+                    out.add(params[i])
+    return out
+
+
+def _fn_params(fn: ast.FunctionDef) -> list[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    return [n for n in names if n != "self"]
+
+
+def _decorator_jit_statics(fn: ast.FunctionDef) -> Optional[set[str]]:
+    """If ``fn`` is jit-decorated, return its static param names (approx)."""
+    params = _fn_params(fn)
+    for deco in fn.decorator_list:
+        name = dotted_name(deco)
+        if name in _JIT_NAMES:
+            return set()
+        if isinstance(deco, ast.Call):
+            cname = dotted_name(deco.func)
+            if cname in _JIT_NAMES:
+                return _jit_call_statics(deco, params)
+            if cname in _PARTIAL_NAMES and deco.args:
+                if dotted_name(deco.args[0]) in _JIT_NAMES:
+                    return _jit_call_statics(deco, params)
+    return None
+
+
+def jitted_functions(module: ModuleInfo) -> list[JittedFn]:
+    """Every function in ``module`` that runs under jax.jit, with its static
+    params. First-order: decorated defs, plus ``jax.jit(name)`` /
+    ``jax.jit(self.method)`` wrapping calls resolved by final name component
+    within the module. Lambdas and higher-order factories are not resolved."""
+    fns = {
+        n.name: n
+        for n in ast.walk(module.tree)
+        if isinstance(n, ast.FunctionDef)
+    }
+    out: dict[int, JittedFn] = {}
+    for fn in fns.values():
+        statics = _decorator_jit_statics(fn)
+        if statics is not None:
+            out[id(fn)] = JittedFn(fn, statics, fn.lineno)
+    for call in ast.walk(module.tree):
+        if not isinstance(call, ast.Call) or dotted_name(call.func) not in _JIT_NAMES:
+            continue
+        if not call.args:
+            continue
+        target = call.args[0]
+        tname = None
+        if isinstance(target, ast.Name):
+            tname = target.id
+        elif isinstance(target, ast.Attribute):
+            tname = target.attr  # self._method / cls.method
+        fn = fns.get(tname)
+        if fn is None:
+            continue
+        statics = _jit_call_statics(call, _fn_params(fn))
+        prev = out.get(id(fn))
+        if prev is not None:
+            prev.static_names |= statics
+        else:
+            out[id(fn)] = JittedFn(fn, statics, call.lineno)
+    return list(out.values())
+
+
+def _blessed_names(test: ast.AST) -> set[int]:
+    """ids of Name nodes inside ``test`` used only in trace-safe positions:
+    under ``.shape/.ndim/.dtype/.size``, inside ``len()``/``isinstance()``,
+    or compared ``is (not) None``."""
+    blessed: set[int] = set()
+
+    def bless(sub: ast.AST) -> None:
+        for n in ast.walk(sub):
+            if isinstance(n, ast.Name):
+                blessed.add(id(n))
+
+    for n in ast.walk(test):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            bless(n.value)
+        elif isinstance(n, ast.Call):
+            fname = dotted_name(n.func)
+            if fname in ("len", "isinstance"):
+                for a in n.args:
+                    bless(a)
+        elif isinstance(n, ast.Compare):
+            ops_none = all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops
+            ) and all(
+                isinstance(c, ast.Constant) and c.value is None
+                for c in n.comparators
+            )
+            if ops_none and n.comparators:
+                bless(n.left)
+    return blessed
+
+
+def _traced_uses(expr: ast.AST, traced: set[str]) -> list[ast.Name]:
+    blessed = _blessed_names(expr)
+    return [
+        n
+        for n in ast.walk(expr)
+        if isinstance(n, ast.Name)
+        and isinstance(n.ctx, ast.Load)
+        and n.id in traced
+        and id(n) not in blessed
+    ]
+
+
+@register(
+    "traced-branch",
+    summary="Python control flow on a traced value inside a jitted function",
+    rationale=(
+        "if/while/for on a tracer raises ConcretizationTypeError at runtime "
+        "or, worse, silently bakes one branch into the compiled program; "
+        "use lax.cond/select/where or mark the argument static"
+    ),
+)
+def check_traced_branch(module: ModuleInfo, ctx: ProjectContext):
+    out = []
+    for jf in jitted_functions(module):
+        traced = set(_fn_params(jf.fn)) - jf.static_names
+        # local names rebound inside the function shadow params
+        for node in ast.walk(jf.fn):
+            tests: list[tuple[ast.AST, str]] = []
+            if isinstance(node, (ast.If, ast.While)):
+                tests.append((node.test, type(node).__name__.lower()))
+            elif isinstance(node, ast.IfExp):
+                tests.append((node.test, "conditional expression"))
+            elif isinstance(node, ast.For):
+                tests.append((node.iter, "for-loop iterable"))
+            for expr, what in tests:
+                for use in _traced_uses(expr, traced):
+                    out.append(Violation(
+                        module.path, use.lineno, use.col_offset,
+                        "traced-branch",
+                        f"{what} depends on traced argument {use.id!r} of "
+                        f"jitted function {jf.fn.name!r}",
+                    ))
+    return out
+
+
+_SHAPE_FNS = {
+    "jnp.zeros", "jnp.ones", "jnp.empty", "jnp.full", "jnp.arange",
+    "jnp.broadcast_to",
+}
+
+
+@register(
+    "nonstatic-jit-arg",
+    summary="traced argument used where a static Python value is required",
+    rationale=(
+        "range()/shape arguments inside jit must be compile-time constants; "
+        "feeding a traced value either errors or forces a recompile per "
+        "distinct value, turning the jit cache into a compile storm"
+    ),
+)
+def check_nonstatic_jit_arg(module: ModuleInfo, ctx: ProjectContext):
+    out = []
+    for jf in jitted_functions(module):
+        traced = set(_fn_params(jf.fn)) - jf.static_names
+        for call in ast.walk(jf.fn):
+            if not isinstance(call, ast.Call):
+                continue
+            fname = dotted_name(call.func)
+            shape_args: list[ast.AST] = []
+            if fname == "range":
+                shape_args = list(call.args)
+            elif fname in _SHAPE_FNS and call.args:
+                shape_args = [call.args[0]]
+                if fname == "jnp.broadcast_to" and len(call.args) > 1:
+                    shape_args = [call.args[1]]
+            elif (
+                isinstance(call.func, ast.Attribute)
+                and call.func.attr == "reshape"
+            ):
+                shape_args = list(call.args)
+            for arg in shape_args:
+                for use in _traced_uses(arg, traced):
+                    out.append(Violation(
+                        module.path, use.lineno, use.col_offset,
+                        "nonstatic-jit-arg",
+                        f"traced argument {use.id!r} of jitted function "
+                        f"{jf.fn.name!r} flows into a static "
+                        f"(shape/range) position of {fname or 'reshape'} — "
+                        f"mark it static or derive it from .shape",
+                    ))
+    return out
+
+
+# --------------------------------------------------------------- host-sync
+def _class_methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)}
+
+
+def _hot_functions(module: ModuleInfo, ctx: ProjectContext) -> list[ast.FunctionDef]:
+    """The engine hot path, approximated: methods reachable from the
+    ``step``/``run`` methods of ``*Engine`` classes via ``self.x()`` calls
+    and same-module bare calls — plus, for modules living in a package that
+    defines an Engine, every top-level class's ``__call__`` (engines invoke
+    collaborators like the batch-prefill runner through ``__call__``)."""
+    hot: dict[int, ast.FunctionDef] = {}
+    module_fns = {
+        n.name: n for n in module.tree.body if isinstance(n, ast.FunctionDef)
+    }
+
+    def expand(fn: ast.FunctionDef, methods: dict[str, ast.FunctionDef]) -> None:
+        if id(fn) in hot:
+            return
+        hot[id(fn)] = fn
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            f = call.func
+            if (
+                isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Name)
+                and f.value.id == "self"
+                and f.attr in methods
+            ):
+                expand(methods[f.attr], methods)
+            elif isinstance(f, ast.Name) and f.id in module_fns:
+                expand(module_fns[f.id], methods)
+
+    pkg_has_engine = False
+    for m in ctx.modules_in_dir(module.package_dir):
+        for n in m.tree.body:
+            if isinstance(n, ast.ClassDef) and "Engine" in n.name:
+                pkg_has_engine = True
+    for n in module.tree.body:
+        if not isinstance(n, ast.ClassDef):
+            continue
+        methods = _class_methods(n)
+        if "Engine" in n.name:
+            for entry in ("step", "run"):
+                if entry in methods:
+                    expand(methods[entry], methods)
+        elif pkg_has_engine and "__call__" in methods:
+            expand(methods["__call__"], methods)
+    return list(hot.values())
+
+
+def _is_device_expr(node: ast.AST) -> bool:
+    """Whether the expression statically references jnp./jax. values."""
+    for n in ast.walk(node):
+        name = dotted_name(n)
+        if name and name.split(".", 1)[0] in _JNP_ROOTS:
+            return True
+    return False
+
+
+@register(
+    "host-sync",
+    summary="device→host synchronization reachable from the engine step loop",
+    rationale=(
+        ".item()/int()/np.asarray() on a device value blocks the dispatch "
+        "queue and serializes the step loop with the accelerator — the TTFT "
+        "wins of batched prefill die here; keep values on device or batch "
+        "the transfer once per step"
+    ),
+)
+def check_host_sync(module: ModuleInfo, ctx: ProjectContext):
+    out = []
+    for fn in _hot_functions(module, ctx):
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            f = call.func
+            if isinstance(f, ast.Attribute) and f.attr in (
+                "item", "block_until_ready", "tolist",
+            ):
+                out.append(Violation(
+                    module.path, call.lineno, call.col_offset, "host-sync",
+                    f".{f.attr}() in hot function {fn.name!r} forces a "
+                    f"device→host sync",
+                ))
+                continue
+            fname = dotted_name(f)
+            if fname == "jax.device_get":
+                out.append(Violation(
+                    module.path, call.lineno, call.col_offset, "host-sync",
+                    f"jax.device_get in hot function {fn.name!r} forces a "
+                    f"device→host sync",
+                ))
+            elif fname in ("int", "float", "bool") and any(
+                _is_device_expr(a) for a in call.args
+            ):
+                out.append(Violation(
+                    module.path, call.lineno, call.col_offset, "host-sync",
+                    f"{fname}() over a device expression in hot function "
+                    f"{fn.name!r} forces a device→host sync",
+                ))
+            elif fname and fname.split(".", 1)[0] in ("np", "numpy") and any(
+                _is_device_expr(a) for a in call.args
+            ):
+                out.append(Violation(
+                    module.path, call.lineno, call.col_offset, "host-sync",
+                    f"{fname}() over a device expression in hot function "
+                    f"{fn.name!r} implicitly copies device→host",
+                ))
+    return out

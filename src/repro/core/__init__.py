@@ -24,6 +24,13 @@ from .dependency_tree import (
     NodeKind,
     Residency,
 )
+from .invariants import (
+    PoolInvariantError,
+    check_pool_invariants,
+    dump_tree,
+    jit_cache_size,
+    sanitize_enabled,
+)
 from .swapper import CacheSwapper, SwapperConfig, make_fastlibra
 
 __all__ = [
@@ -42,6 +49,7 @@ __all__ = [
     "Node",
     "NodeKind",
     "PoolExhausted",
+    "PoolInvariantError",
     "Residency",
     "SwapKind",
     "SwapOp",
@@ -49,7 +57,11 @@ __all__ = [
     "Tier",
     "blocks_for_lora",
     "blocks_for_tokens",
+    "check_pool_invariants",
+    "dump_tree",
     "expected_lora_demand",
+    "jit_cache_size",
     "make_fastlibra",
+    "sanitize_enabled",
     "sigmoid",
 ]

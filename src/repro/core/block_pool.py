@@ -19,6 +19,8 @@ import dataclasses
 import enum
 from typing import Iterable
 
+from .invariants import PoolInvariantError
+
 
 class Tier(enum.Enum):
     """Memory tier a block lives in."""
@@ -112,13 +114,17 @@ class BlockPool:
         return self.stats().hbm_usage
 
     def check_invariants(self) -> None:
-        """Debug invariant: free + allocated partitions the id space."""
+        """Invariant: free + allocated partitions the id space. Raises (not
+        asserts — this must survive ``python -O``) on corruption."""
         for tier, total in ((Tier.HBM, self.num_hbm_blocks), (Tier.HOST, self.num_host_blocks)):
             free = set(self._free[tier])
             alloc = self._allocated[tier]
-            assert free.isdisjoint(alloc), f"{tier}: double-booked blocks"
-            assert len(free) + len(alloc) == total, f"{tier}: leaked blocks"
-            assert free | alloc == set(range(total)), f"{tier}: id space corrupt"
+            if not free.isdisjoint(alloc):
+                raise PoolInvariantError(f"{tier}: double-booked blocks")
+            if len(free) + len(alloc) != total:
+                raise PoolInvariantError(f"{tier}: leaked blocks")
+            if free | alloc != set(range(total)):
+                raise PoolInvariantError(f"{tier}: id space corrupt")
 
 
 def blocks_for_tokens(num_tokens: int, block_size: int) -> int:

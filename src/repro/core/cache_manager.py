@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 from typing import Optional, Sequence
 
 from .block_pool import BlockPool, PoolExhausted, Tier
@@ -40,6 +41,27 @@ from .dependency_tree import (
     NodeKind,
     Residency,
 )
+from .invariants import (
+    PoolInvariantError,
+    check_pool_invariants,
+    sanitize_enabled,
+)
+
+
+def _checked(fn):
+    """Run the full pool-invariant sweep after a mutating public op when the
+    sanitizer is on (``REPRO_SANITIZE=1`` or ``ManagerConfig(sanitize=True)``).
+    Corruption is then caught at the op that introduced it, not at whatever
+    later op trips over it."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        out = fn(self, *args, **kwargs)
+        if self._sanitize:
+            check_pool_invariants(self, context=fn.__name__)
+        return out
+
+    return wrapper
 
 
 class SwapKind(enum.Enum):
@@ -109,6 +131,9 @@ class ManagerConfig:
     # not per-token blocks — so the dependency tree runs unquantized
     # (align=1) when state caching is on.
     state_bytes: int = 0
+    # libra-check sanitizer: True/False forces the per-op invariant sweep on
+    # or off; None defers to the REPRO_SANITIZE environment variable.
+    sanitize: Optional[bool] = None
 
     @property
     def block_bytes(self) -> int:
@@ -170,6 +195,9 @@ class CacheManager:
         hardware: Optional[HardwareModel] = None,
     ):
         self.config = config
+        self._sanitize = (
+            config.sanitize if config.sanitize is not None else sanitize_enabled()
+        )
         self.hw = hardware or HardwareModel()
         bb = config.block_bytes
         n_hbm = max(1, hbm_bytes // bb)
@@ -231,6 +259,7 @@ class CacheManager:
         return used / tot
 
     # ---------------------------------------------------------------- LoRAs
+    @_checked
     def register_lora(self, lora_id: str, size_bytes: int, now: float = 0.0) -> SwapOp:
         """Load a LoRA's weights into the host tier (from disk)."""
         nblocks = -(-size_bytes // self.config.block_bytes)
@@ -245,6 +274,7 @@ class CacheManager:
         )
 
     # ---------------------------------------------------------------- lookup
+    @_checked
     def lookup(self, lora_id: str, history_tokens: Sequence[int], now: float) -> LookupResult:
         m = self.tree.match(lora_id, history_tokens, now)
         lora_resident = (
@@ -271,6 +301,7 @@ class CacheManager:
         self.stats.history_tokens += len(history_tokens)
         return res
 
+    @_checked
     def lookup_state(
         self, lora_id: str, history_tokens: Sequence[int], now: float
     ) -> LookupResult:
@@ -324,6 +355,7 @@ class CacheManager:
         return res
 
     # ----------------------------------------------------------------- admit
+    @_checked
     def admit(self, lookup: LookupResult, now: float) -> AdmitResult:
         """Bring the query's LoRA + matched KV chain into HBM and pin them.
 
@@ -350,6 +382,17 @@ class CacheManager:
         protect.update(n.node_id for n in m.kv_nodes)
         if m.lora_node is not None:
             protect.add(m.lora_node.node_id)
+        # admit-shield integrity (sanitizer): every working-set node that is
+        # HBM-resident when make-room starts must still be at admit end —
+        # exactly the regression class the state-interleave fuzz caught.
+        working_set = list(m.kv_nodes)
+        if m.lora_node is not None:
+            working_set.append(m.lora_node)
+        shielded = (
+            {n.node_id for n in working_set if n.tier is Residency.HBM}
+            if self._sanitize
+            else None
+        )
         for node in needed:
             op = self._swap_in_node(node, now, protect=protect)
             if op is None:
@@ -373,14 +416,30 @@ class CacheManager:
         if deepest is not None:
             deepest.ref_count += 1
             pinned.append(deepest)
+        if shielded is not None:
+            lost = [
+                n for n in working_set + needed
+                if n.node_id in shielded | {x.node_id for x in needed}
+                and n.tier is not Residency.HBM
+            ]
+            if lost:
+                raise PoolInvariantError(
+                    "admit-shield: working-set node(s) evicted mid-admit: "
+                    + ", ".join(
+                        f"#{n.node_id}({n.kind.value}, tier={n.tier})"
+                        for n in lost
+                    ),
+                )
         return AdmitResult(ops=ops, pinned=pinned)
 
+    @_checked
     def unpin(self, pinned: Sequence[Node]) -> None:
         for n in pinned:
             if n.ref_count > 0:
                 n.ref_count -= 1
 
     # --------------------------------------------------------- running blocks
+    @_checked
     def allocate_running(
         self, query_id: str, num_tokens: int, now: float
     ) -> Optional[list[int]]:
@@ -405,12 +464,14 @@ class CacheManager:
     def running_blocks(self, query_id: str) -> list[int]:
         return list(self._running.get(query_id, ()))
 
+    @_checked
     def abort_running(self, query_id: str) -> None:
         blocks = self._running.pop(query_id, [])
         self._running_tokens.pop(query_id, None)
         if blocks:
             self.kv_pool.release(Tier.HBM, blocks)
 
+    @_checked
     def commit(
         self,
         query_id: str,
@@ -480,6 +541,7 @@ class CacheManager:
                 p = p.parent
         return node
 
+    @_checked
     def commit_state(
         self, lora_id: str, prefix_tokens: Sequence[int], now: float
     ) -> Optional[Node]:
@@ -644,7 +706,9 @@ class CacheManager:
                 cands = [n for n in cands if self._pool_for(n.kind) is pool]
             if not cands:
                 return False
-            victim = min(cands, key=lambda n: self.scorer.score(n, now))
+            # node_id tiebreak: equal scores (e.g. cold same-size nodes) must
+            # not make victim choice depend on tree-dict insertion order
+            victim = min(cands, key=lambda n: (self.scorer.score(n, now), n.node_id))
             self._swap_out_node(victim, now)
         return True
 
@@ -689,8 +753,14 @@ class CacheManager:
         return self.tree.invalid_hbm_bytes() / total
 
     def check_invariants(self) -> None:
-        self.pool.check_invariants()
-        if not self.config.unified_pool:
-            self.lora_pool.check_invariants()
-        if self.config.maintain_dependencies:
-            self.tree.check_validity_invariant()
+        """Run the full libra-check structural sweep (always-on entry point;
+        the legacy pool-partition and validity checks are a subset of it)."""
+        check_pool_invariants(self)
+
+    def sanitize_check(self, context: str = "") -> None:
+        """Invariant sweep gated on the sanitizer flag — cheap no-op when
+        off. Collaborators (the swapper) call this after their own pool
+        mutations so sanitize mode covers every mutation site, not just the
+        manager's public methods."""
+        if self._sanitize:
+            check_pool_invariants(self, context=context)

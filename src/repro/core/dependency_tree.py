@@ -37,6 +37,8 @@ import itertools
 import math
 from typing import Callable, Iterator, Optional, Sequence
 
+from .invariants import PoolInvariantError
+
 Token = int
 TokenSeq = tuple[Token, ...]
 
@@ -345,7 +347,8 @@ class DependencyTree:
                 return node, absorbed
             common = _common_prefix_len(existing.tokens, toks)
             common = (common // self.align) * self.align
-            assert common >= self.align, "sibling key collision without overlap"
+            if common < self.align:
+                raise PoolInvariantError("sibling key collision without overlap")
             if common < len(existing.tokens):
                 existing = self._split(existing, common)
             existing.touch(now, self.decay_tau)
@@ -365,7 +368,11 @@ class DependencyTree:
         node's own boundary, so there is no data for the intermediate
         boundary — the upper node gets zero bytes/blocks (pure trie
         structure) and the payload stays whole on the lower node."""
-        assert 0 < at < len(node.tokens)
+        if not 0 < at < len(node.tokens):
+            raise PoolInvariantError(
+                f"split offset {at} outside edge of node {node.node_id} "
+                f"({len(node.tokens)} tokens)"
+            )
         upper_tokens, lower_tokens = node.tokens[:at], node.tokens[at:]
         frac = 0.0 if node.kind is NodeKind.STATE else at / len(node.tokens)
         upper = Node(
@@ -380,7 +387,10 @@ class DependencyTree:
             last_access=node.last_access,
             last_decay=node.last_decay,
         )
-        assert node.parent is not None
+        if node.parent is None:
+            raise PoolInvariantError(
+                f"cannot split detached node {node.node_id} (no parent)"
+            )
         node.parent.children[upper_tokens[: self.align]] = upper
         node.parent = upper
         node.tokens = lower_tokens
@@ -410,7 +420,10 @@ class DependencyTree:
         if node.ref_count:
             raise ValueError("cannot remove a pinned node")
         parent = node.parent
-        assert parent is not None
+        if parent is None:
+            raise PoolInvariantError(
+                f"cannot remove already-detached node {node.node_id}"
+            )
         if node.kind is NodeKind.LORA:
             del parent.children[node.node_id]
             del self._lora_nodes[node.lora_id]  # type: ignore[arg-type]
@@ -473,10 +486,11 @@ class DependencyTree:
         for n in self.iter_nodes():
             if n.tier is Residency.HBM and n.parent is not None:
                 p = n.parent
-                assert p.kind is NodeKind.ROOT or p.tier is Residency.HBM, (
-                    f"validity invariant violated at node {n.node_id} "
-                    f"({n.kind}, lora={n.lora_id})"
-                )
+                if not (p.kind is NodeKind.ROOT or p.tier is Residency.HBM):
+                    raise PoolInvariantError(
+                        f"validity invariant violated at node {n.node_id} "
+                        f"({n.kind}, lora={n.lora_id})"
+                    )
 
     def invalid_hbm_bytes(self) -> int:
         """Bytes of HBM-resident KV whose ancestry is NOT fully resident.

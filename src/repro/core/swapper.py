@@ -80,6 +80,7 @@ class CacheSwapper:
         elif usage < cfg.lower_threshold:
             ops.extend(self._swap_in_sweep(now))
         self.total_ops += len(ops)
+        mgr.sanitize_check("swapper.tick")
         return ops
 
     # ------------------------------------------------------------------ busy
@@ -93,7 +94,8 @@ class CacheSwapper:
             cands = mgr.evict_candidates()
             if not cands:
                 break
-            victim = min(cands, key=lambda n: mgr.scorer.score(n, now))
+            # node_id tiebreak keeps victim choice deterministic on equal Eval
+            victim = min(cands, key=lambda n: (mgr.scorer.score(n, now), n.node_id))
             ops.append(mgr._swap_out_node(victim, now))
         return ops
 
@@ -115,7 +117,9 @@ class CacheSwapper:
                 ]
             if not cands:
                 break
-            best = max(cands, key=lambda n: mgr.scorer.score(n, now))
+            # -node_id tiebreak: on equal Eval prefetch the oldest node
+            # deterministically instead of whatever dict order yields first
+            best = max(cands, key=lambda n: (mgr.scorer.score(n, now), -n.node_id))
             # prefetch only while it fits without evicting anything hotter
             pool = mgr._pool_for(best.kind)
             from .block_pool import Tier
@@ -138,6 +142,7 @@ def make_fastlibra(
     hardware=None,
     variant: str = "fastlibra",
     state_bytes: int = 0,
+    sanitize: Optional[bool] = None,
 ) -> tuple[CacheManager, CacheSwapper]:
     """Factory for FASTLIBRA and every paper baseline/ablation.
 
@@ -152,7 +157,7 @@ def make_fastlibra(
     from .cache_manager import ManagerConfig
 
     base = dict(block_size=block_size, kv_bytes_per_token=kv_bytes_per_token,
-                state_bytes=state_bytes)
+                state_bytes=state_bytes, sanitize=sanitize)
     sw = SwapperConfig()
     if variant == "fastlibra":
         cfg = ManagerConfig(**base)

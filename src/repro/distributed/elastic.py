@@ -68,7 +68,8 @@ def plan_mesh(
                 best = plan
         if best is not None and best.size == used:
             break
-    assert best is not None
+    if best is None:
+        raise RuntimeError("no feasible (data, model) plan for the surviving devices")
     return best
 
 

@@ -19,5 +19,6 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_devices: int | None = None, model: int = 1):
     """Small mesh over whatever devices exist (CPU tests)."""
     n = n_devices or len(jax.devices())
-    assert n % model == 0
+    if n % model != 0:
+        raise ValueError(f"{n} devices not divisible by model={model}")
     return jax.make_mesh((n // model, model), ("data", "model"))

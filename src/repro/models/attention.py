@@ -342,7 +342,8 @@ def gqa_cached(
 # ====================================================================== MLA
 def init_mla(key, cfg: ModelConfig, dtype) -> dict:
     m = cfg.mla
-    assert m is not None
+    if m is None:
+        raise ValueError("init_mla requires cfg.mla to be configured")
     d, H = cfg.d_model, cfg.num_heads
     ks = jax.random.split(key, 4)
     return {

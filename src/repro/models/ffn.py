@@ -29,7 +29,8 @@ def dense_ffn(p: dict, x: Array, act_name: str) -> Array:
 # --------------------------------------------------------------------- MoE
 def init_moe(key, cfg: ModelConfig, dtype) -> dict:
     m = cfg.moe
-    assert m is not None
+    if m is None:
+        raise ValueError("init_moe requires cfg.moe to be configured")
     d, ff, E = cfg.d_model, m.d_ff_expert, m.num_experts
     ks = jax.random.split(key, 5)
     p = {

@@ -33,7 +33,8 @@ def _proj(x, w, lora, name, adapter_ids, scale):
 # ================================================================== RWKV-6
 def init_rwkv_layer(key, cfg: ModelConfig, dtype) -> dict:
     r = cfg.rwkv
-    assert r is not None
+    if r is None:
+        raise ValueError("init_rwkv_layer requires cfg.rwkv to be configured")
     d = cfg.d_model
     H, N = d // r.head_dim, r.head_dim
     ks = jax.random.split(key, 10)
@@ -147,7 +148,8 @@ def rwkv_channel_mix(p, x, state, cfg, token_mask=None):
 # ================================================================== RG-LRU
 def init_rglru_layer(key, cfg: ModelConfig, dtype) -> dict:
     g = cfg.rglru
-    assert g is not None
+    if g is None:
+        raise ValueError("init_rglru_layer requires cfg.rglru to be configured")
     d = cfg.d_model
     w = g.lru_width or d
     ks = jax.random.split(key, 6)

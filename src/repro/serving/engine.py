@@ -259,6 +259,27 @@ class ServingEngine:
         self._epoch = self._now()
         self.manager.stats = type(self.manager.stats)()
 
+    def compile_counts(self) -> dict[str, int]:
+        """Distinct compiled programs per jitted entry point (libra-check
+        probe). A healthy bucketed engine is bounded by #buckets for prefill
+        and 1 per fixed-shape entry point — the compile-count regression
+        test pins this so a non-static scalar sneaking into a jit signature
+        (one compile per Python value) fails loudly instead of silently
+        melting TTFT."""
+        from repro.core import jit_cache_size
+
+        counts = {
+            "prefill": self.prefill.compile_count,
+            "decode": jit_cache_size(self._decode_fn),
+        }
+        if self.state_cache is not None:
+            counts["state"] = (
+                jit_cache_size(self._state_seed_fn)
+                + jit_cache_size(self._state_reset_fn)
+                + jit_cache_size(self._state_flatten_fn)
+            )
+        return counts
+
     # ----------------------------------------------------------------- LoRA
     def register_adapter(self, adapter_id: str, key=None) -> None:
         key = key if key is not None else jax.random.PRNGKey(hash(adapter_id) % (1 << 30))
@@ -400,13 +421,20 @@ class ServingEngine:
         for s in chunks:
             chunk_mask[s] = True
         ids = self._adapter_ids()
+        # tokens/true_lens/row_mask stay host-side np arrays: BatchPrefill
+        # does its stats math on them before dispatch, and wrapping them in
+        # jnp.asarray here forced a device round trip per step (jit commits
+        # them to device at dispatch either way)
         last_logits, new_cache = self.prefill(
             self.params, self.adapters.slots, self.cache,
-            jnp.asarray(tokens), jnp.asarray(self.cache["len"]),
-            jnp.asarray(true_lens), jnp.asarray(row_mask), ids,
+            tokens, jnp.asarray(self.cache["len"]),
+            true_lens, row_mask, ids,
             stat_mask=chunk_mask,
         )
         self.cache = new_cache
+        # sampled tokens must reach Python for generation/finish
+        # bookkeeping: ONE batched transfer per step is the right shape
+        # libra: ignore[host-sync]
         toks = np.asarray(jnp.argmax(last_logits, axis=-1))
         for r in decode_rows:
             r.generated.append(int(toks[r.slot]))
@@ -564,6 +592,9 @@ class ServingEngine:
                     self.cache, jnp.asarray(slot, jnp.int32))
         req.prefill_pos = len(req.prompt)
         req.phase = Phase.DECODE
+        # first sampled token must reach Python (eager fallback path,
+        # one scalar transfer per admitted request)
+        # libra: ignore[host-sync]
         tok = int(jnp.argmax(logits[slot, -1]))
         req.generated.append(tok)
         req.first_token_time = self._now()
@@ -614,6 +645,9 @@ class ServingEngine:
             jnp.asarray(tokens), ids,
         )
         self._merge_cache(new_cache, rows=[r.slot for r in active])
+        # sampled tokens must reach Python for generation/finish
+        # bookkeeping: ONE batched transfer per step is the right shape
+        # libra: ignore[host-sync]
         toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
         for r in active:
             r.generated.append(int(toks[r.slot]))

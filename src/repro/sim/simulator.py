@@ -423,7 +423,9 @@ class ServingSimulator:
                 if stalled and not any_progress:
                     # every running request is blocked on HBM: preempt the
                     # youngest (vLLM-style recompute preemption) to unblock
-                    victim = max(stalled, key=lambda r: r.query.arrival)
+                    # rid tiebreak: simultaneous arrivals (trace bursts) must
+                    # preempt deterministically, not by list-build order
+                    victim = max(stalled, key=lambda r: (r.query.arrival, r.rid))
                     stalled.remove(victim)
                     self.manager.abort_running(victim.rid)
                     self.manager.unpin(victim.pinned)

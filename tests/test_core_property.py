@@ -105,10 +105,15 @@ mixed_op_st = st.one_of(
 
 
 def _check_breakdown(mgr, hbm_bytes):
-    """hbm_breakdown totals: categories never exceed the pool capacity."""
+    """Byte-accounting exactness: the hbm_breakdown() category sums must
+    equal the block pool's used bytes EXACTLY — not merely stay under
+    capacity. Any drift (a leaked block, a double-count across categories)
+    shows up as an inequality here at the op that introduced it."""
     bd = mgr.hbm_breakdown()
     used = (bd["lora_bytes"] + bd["history_kv_bytes"]
             + bd["state_snapshot_bytes"] + bd["running_kv_bytes"])
+    pool_used = mgr.pool.stats().hbm_used * mgr.config.block_bytes
+    assert used == pool_used, (bd, pool_used)
     assert used <= bd["total_bytes"], bd
     assert bd["total_bytes"] <= hbm_bytes, bd
 
@@ -122,6 +127,7 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
         host_bytes=128 * BLOCK_BYTES,
         kv_bytes_per_token=KVB,
         block_size=BS,
+        sanitize=True,  # full libra-check sweep after EVERY mutating op
     )
     for lid in "abc":
         mgr.register_lora(lid, BLOCK_BYTES, now=0.0)
@@ -215,6 +221,7 @@ def test_state_nodes_interleaved_with_kv_and_lora_ops(ops, hbm_blocks):
         kv_bytes_per_token=KVB,
         block_size=BS,
         state_bytes=STATE_BYTES,
+        sanitize=True,
     )
     for lid in "abcd":
         mgr.register_lora(lid, BLOCK_BYTES, now=0.0)
@@ -293,6 +300,7 @@ def test_manager_invariants_under_workload(ops, hbm_blocks):
         host_bytes=128 * BLOCK_BYTES,
         kv_bytes_per_token=KVB,
         block_size=BS,
+        sanitize=True,
     )
     for lid in "abc":
         mgr.register_lora(lid, BLOCK_BYTES, now=0.0)

@@ -1,0 +1,224 @@
+"""Tests for the libra-check static lint pass (repro.analysis).
+
+Each rule gets a minimal synthetic module that must fire and a
+counterpart that must stay clean (blessed constructs, static jit args,
+check-context asserts, tuple tiebreaks). Suppression handling —
+``# libra: ignore[...]`` on the line or directly above, wildcard, and
+stale-id reporting — is exercised separately. Finally the real ``src/``
+tree must lint clean: that is the same gate CI enforces.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import all_rules
+from repro.analysis.lint import main, run_lint
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def lint_src(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(source)
+    return run_lint([str(p)])
+
+
+def rule_ids(violations):
+    return [v.rule_id for v in violations]
+
+
+# ----------------------------------------------------------------- rules
+def test_traced_branch_fires_and_blessed_is_clean(tmp_path):
+    vs = lint_src(tmp_path, """\
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+""")
+    assert rule_ids(vs) == ["traced-branch"]
+    assert vs[0].line == 5
+
+    clean = lint_src(tmp_path, """\
+import jax
+
+@jax.jit
+def f(x):
+    if x.ndim == 2:          # shape metadata: static under trace
+        return x
+    if x is None:            # identity test: static
+        return x
+    for i in range(x.shape[0]):
+        pass
+    return -x
+""", name="clean.py")
+    assert clean == []
+
+
+def test_traced_branch_via_jit_wrapping_call(tmp_path):
+    vs = lint_src(tmp_path, """\
+import jax
+
+def step(n):
+    while n > 0:
+        n = n - 1
+    return n
+
+fast_step = jax.jit(step)
+""")
+    assert rule_ids(vs) == ["traced-branch"]
+
+
+def test_nonstatic_jit_arg_and_static_argnames(tmp_path):
+    vs = lint_src(tmp_path, """\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def g(n):
+    return jnp.zeros(n)
+""")
+    assert rule_ids(vs) == ["nonstatic-jit-arg"]
+
+    clean = lint_src(tmp_path, """\
+from functools import partial
+import jax
+import jax.numpy as jnp
+
+@partial(jax.jit, static_argnames=("n",))
+def h(x, n):
+    return x.reshape(n, -1) + jnp.zeros(n)
+""", name="clean.py")
+    assert clean == []
+
+
+def test_host_sync_in_engine_hot_path(tmp_path):
+    vs = lint_src(tmp_path, """\
+import jax.numpy as jnp
+
+class ToyEngine:
+    def step(self):
+        v = jnp.ones(3)
+        return int(jnp.sum(v))
+
+    def report(self):
+        # not reachable from step/run: cold path, conversions are fine
+        return float(jnp.zeros(()))
+""")
+    assert rule_ids(vs) == ["host-sync"]
+    assert vs[0].line == 6
+
+
+def test_bare_assert_and_check_context_exemption(tmp_path):
+    vs = lint_src(tmp_path, """\
+def mutate(xs):
+    assert xs, "empty"
+    return xs.pop()
+
+def check_invariants(xs):
+    assert xs  # check helpers may assert
+
+def test_mutate():
+    assert mutate([1]) == 1
+""")
+    assert rule_ids(vs) == ["bare-assert"]
+    assert vs[0].line == 2
+
+
+def test_dict_order_tiebreak(tmp_path):
+    vs = lint_src(tmp_path, """\
+def pick(nodes):
+    return min(nodes, key=lambda n: n.score)
+
+def pick_stable(nodes):
+    return min(nodes, key=lambda n: (n.score, n.node_id))
+""")
+    assert rule_ids(vs) == ["dict-order-tiebreak"]
+    assert vs[0].line == 2
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    vs = lint_src(tmp_path, "def broken(:\n")
+    assert rule_ids(vs) == ["syntax-error"]
+
+
+# ----------------------------------------------------------- suppression
+def test_suppression_on_line_and_line_above(tmp_path):
+    clean = lint_src(tmp_path, """\
+def mutate(xs):
+    assert xs  # libra: ignore[bare-assert]
+    # libra: ignore[bare-assert]
+    assert len(xs) > 1
+    return xs.pop()
+""")
+    assert clean == []
+
+
+def test_wildcard_suppression(tmp_path):
+    clean = lint_src(tmp_path, """\
+def mutate(xs):
+    assert xs  # libra: ignore[*]
+    return xs.pop()
+""")
+    assert clean == []
+
+
+def test_unknown_suppression_is_itself_flagged(tmp_path):
+    vs = lint_src(tmp_path, """\
+x = 1  # libra: ignore[no-such-rule]
+""")
+    assert rule_ids(vs) == ["unknown-suppression"]
+    assert "no-such-rule" in vs[0].message
+
+
+def test_suppression_does_not_leak_to_other_rules(tmp_path):
+    vs = lint_src(tmp_path, """\
+def mutate(xs):
+    # libra: ignore[dict-order-tiebreak]
+    assert xs
+    return xs.pop()
+""")
+    assert rule_ids(vs) == ["bare-assert"]
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_report(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(xs):\n    assert xs\n")
+    report = tmp_path / "report.txt"
+    assert main([str(bad), "--report", str(report)]) == 1
+    assert "bare-assert" in report.read_text()
+    capsys.readouterr()
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert main([str(good)]) == 0
+    assert "no violations" in capsys.readouterr().out
+
+
+def test_list_rules_covers_registry(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in all_rules():
+        assert rule.rule_id in out
+    assert len(all_rules()) >= 5
+
+
+# ------------------------------------------------------------- real tree
+def test_src_tree_lints_clean():
+    """The blocking CI gate: the shipped tree has zero violations."""
+    vs = run_lint([str(REPO / "src")])
+    assert vs == [], "\n".join(v.render() for v in vs)
+
+
+def test_module_entry_point():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(REPO / "src")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "no violations" in proc.stdout
