@@ -19,8 +19,13 @@ trace where rounds after the first resume from state snapshots
 (kvcache/state_cache.py) — snapshot-hit TTFT vs cold-prefix TTFT, paired
 per prompt.
 
+``run_shared_prefix`` adds the cross-adapter prefix-sharing scenario: N
+adapters × one common system prompt, served with the shared-trunk cache
+(``share_prefix_kv=True``) vs the per-adapter baseline — HBM KV hit-rate
+gain plus paired-median TTFT ratio.
+
 CLI: ``PYTHONPATH=src python benchmarks/prefill_bench.py
-[--quick] [--recurrent]``.
+[--quick] [--recurrent] [--shared-prefix]``.
 """
 
 from __future__ import annotations
@@ -298,6 +303,98 @@ def run_recurrent(out, prefix: str = "prefill/recurrent",
              f"paired_median;target<1.0;state_hit_rate={hit_rate:.3f}")
 
 
+def run_shared_prefix(out, prefix: str = "prefill/shared",
+                      repeats: int = 4, slen: int = 24, tail: int = 40) -> None:
+    """Cross-adapter prefix-sharing scenario: N adapters × ONE system prompt.
+
+    Each repeat generates a fresh shared system prompt plus per-adapter
+    tails, then serves one request per adapter sequentially on TWO engines —
+    ``share_prefix_kv=True`` (trunk caching) and ``False`` (per-adapter
+    baseline). Both compute the span with the adapter inactive, so the only
+    difference is the caching layer: with sharing, adapters 1..N-1 hit trunk
+    KV that adapter 0 computed; without it every adapter prefills the span
+    cold. Reported: HBM KV hit rates, shared-span hit rate, warm-position
+    mean TTFT per config, and the per-repeat paired-median shared/unshared
+    TTFT ratio (pairing cancels CPU-clock drift; target <= 1.0)."""
+    import dataclasses
+    import statistics
+
+    import jax
+
+    def build(share: bool) -> ServingEngine:
+        cfg = configs.reduced(configs.get("qwen3-0.6b"))
+        cfg = dataclasses.replace(
+            cfg, lora=dataclasses.replace(cfg.lora, max_adapters=N_LORAS))
+        ecfg = EngineConfig(
+            hbm_bytes=16 << 20, host_bytes=64 << 20, block_size=4,
+            max_batch_slots=8, max_seq_len=288,
+            prefill_mode="bucketed", prefill_chunk=64, prefill_min_bucket=8,
+            schedule_mode="mixed", step_token_budget=8 + 8 * 64,
+            share_prefix_kv=share,
+        )
+        eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(0))
+        for i in range(N_LORAS):
+            eng.register_adapter(f"lora-{i}")
+        return eng
+
+    engines = {True: build(True), False: build(False)}
+    # burn-in: one throwaway repeat per engine compiles both the base-row
+    # span path and the adapter path before anything is timed
+    rng = np.random.RandomState(23)
+    for share, eng in engines.items():
+        sys_p = tuple(int(t) for t in rng.randint(1, 900, size=slen))
+        for i in range(N_LORAS):
+            t = tuple(int(x) for x in rng.randint(1, 900, size=tail))
+            eng.submit(Request(f"spwarm{share}-{i}", f"lora-{i}", sys_p + t,
+                               max_new_tokens=4, shared_prefix_len=slen))
+            eng.run(max_steps=100_000)
+        eng.reset_metrics()
+
+    rng = np.random.RandomState(3)
+    warm_ttfts: dict[bool, list[float]] = {True: [], False: []}
+    ratios: list[float] = []
+    for rep in range(repeats):
+        sys_p = tuple(int(t) for t in rng.randint(1, 900, size=slen))
+        tails = [tuple(int(x) for x in rng.randint(1, 900, size=tail))
+                 for _ in range(N_LORAS)]
+        # ABBA counterbalancing across repeats: CPU drift cancels in pairs
+        order = (True, False) if rep % 2 == 0 else (False, True)
+        rep_mean: dict[bool, float] = {}
+        for share in order:
+            eng = engines[share]
+            ttfts = []
+            for i, t in enumerate(tails):
+                r = Request(f"sp{rep}-{share}-{i}", f"lora-{i}", sys_p + t,
+                            max_new_tokens=8, shared_prefix_len=slen)
+                eng.submit(r)
+                eng.run(max_steps=100_000)
+                assert r.ttft is not None
+                ttfts.append(r.ttft)
+            # warm positions only: adapter 0 seeds the trunk (cold in both
+            # configs); 1..N-1 are where sharing can pay
+            warm_ttfts[share].extend(ttfts[1:])
+            rep_mean[share] = statistics.fmean(ttfts[1:])
+        if rep_mean[False] > 0:
+            ratios.append(rep_mean[True] / rep_mean[False])
+    shared_stats = engines[True].manager.stats
+    unshared_stats = engines[False].manager.stats
+    hit_gain = shared_stats.kv_hit_rate() - unshared_stats.kv_hit_rate()
+    ratio = statistics.median(ratios) if ratios else 0.0
+    out.emit(f"{prefix}/shared/mean_ttft",
+             statistics.fmean(warm_ttfts[True]) * 1e6,
+             f"n={len(warm_ttfts[True])};adapters={N_LORAS};"
+             f"kv_hit={shared_stats.kv_hit_rate():.3f};"
+             f"shared_hit={shared_stats.shared_hit_rate():.3f}")
+    out.emit(f"{prefix}/unshared/mean_ttft",
+             statistics.fmean(warm_ttfts[False]) * 1e6,
+             f"n={len(warm_ttfts[False])};adapters={N_LORAS};"
+             f"kv_hit={unshared_stats.kv_hit_rate():.3f}")
+    out.emit(f"{prefix}/summary/shared_over_unshared_ttft", ratio,
+             f"paired_median;target<=1.0;reps={len(ratios)}")
+    out.emit(f"{prefix}/summary/kv_hit_rate_gain", hit_gain,
+             "shared_minus_unshared;target>0")
+
+
 def run_sim_modes(out, prefix: str = "prefill/sim") -> None:
     """Simulator cross-check: the same mode split at Llama-7B scale."""
     try:
@@ -331,15 +428,23 @@ def main() -> None:
                     help="skip the simulator cross-check")
     ap.add_argument("--recurrent", action="store_true",
                     help="run ONLY the recurrent snapshot-reuse scenario")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="run ONLY the cross-adapter prefix-sharing scenario")
     args = ap.parse_args()
     out = CsvOut()
     if args.recurrent:
         run_recurrent(out, n_prompts=4 if args.quick else 6,
                       rounds=3, plen=64 if args.quick else 96)
         return
+    if args.shared_prefix:
+        run_shared_prefix(out, repeats=2 if args.quick else 4,
+                          slen=16 if args.quick else 24,
+                          tail=24 if args.quick else 40)
+        return
     run(out, n=12 if args.quick else N_REQUESTS)
     if not args.quick:
         run_recurrent(out)
+        run_shared_prefix(out)
     if not (args.quick or args.no_sim):
         run_sim_modes(out)
 

@@ -94,6 +94,13 @@ class LookupResult:
     host_hit_tokens: int
     history_tokens: int  # reusable prefix length presented by the query
     swap_in_nodes: list[Node]  # host-resident nodes on the matched path
+    # cross-adapter prefix sharing: the block-quantized adapter-independent
+    # span the request declared (0 when sharing is off / undeclared) and how
+    # many of those tokens the shared trunk served from HBM. ``commit`` uses
+    # ``shared_prefix_len`` to classify the committed suffix into trunk
+    # (lora_id=None) vs adapter-fork spans.
+    shared_prefix_len: int = 0
+    shared_hit_tokens: int = 0
     # recurrent-state lookups (lookup_state) only: the deepest snapshot node
     # carrying payload at or below the prompt, and the prefix boundary
     # (token count) decoding can resume from
@@ -131,6 +138,13 @@ class ManagerConfig:
     # not per-token blocks — so the dependency tree runs unquantized
     # (align=1) when state caching is on.
     state_bytes: int = 0
+    # Cross-adapter prefix sharing: requests may declare a leading
+    # adapter-independent span (``shared_prefix_len`` — a system prompt
+    # computed with the adapter inactive). Its KV is cached ONCE on a shared
+    # base-model trunk under the tree root and forked per adapter below.
+    # False keeps the declared span base-computed but caches it per adapter
+    # (the differential baseline: identical tokens, duplicated cache).
+    share_prefix_kv: bool = True
     # libra-check sanitizer: True/False forces the per-op invariant sweep on
     # or off; None defers to the REPRO_SANITIZE environment variable.
     sanitize: Optional[bool] = None
@@ -164,6 +178,10 @@ class ManagerStats:
     state_hits: int = 0
     state_hit_tokens: int = 0
     state_host_hit_tokens: int = 0
+    # cross-adapter shared-prefix counters: declared (block-quantized)
+    # adapter-independent tokens presented vs those the trunk served from HBM
+    shared_history_tokens: int = 0
+    shared_hbm_hit_tokens: int = 0
 
     def lora_hit_rate(self) -> float:
         return self.lora_hbm_hits / self.lookups if self.lookups else 0.0
@@ -180,6 +198,14 @@ class ManagerStats:
         return (
             self.state_hit_tokens / self.history_tokens
             if self.history_tokens
+            else 0.0
+        )
+
+    def shared_hit_rate(self) -> float:
+        """Token-weighted HBM hit rate over declared shared-prefix spans."""
+        return (
+            self.shared_hbm_hit_tokens / self.shared_history_tokens
+            if self.shared_history_tokens
             else 0.0
         )
 
@@ -275,8 +301,19 @@ class CacheManager:
 
     # ---------------------------------------------------------------- lookup
     @_checked
-    def lookup(self, lora_id: str, history_tokens: Sequence[int], now: float) -> LookupResult:
-        m = self.tree.match(lora_id, history_tokens, now)
+    def lookup(self, lora_id: str, history_tokens: Sequence[int], now: float,
+               shared_prefix_len: int = 0) -> LookupResult:
+        """Prefix lookup. ``shared_prefix_len`` declares how many leading
+        history tokens are adapter-independent (computed with the adapter
+        inactive): with ``share_prefix_kv`` on, that span is matched against
+        the shared base-model trunk — hitting KV cached by *other* adapters —
+        and committed there. The span is quantized down to the block size so
+        trunk and fork edges stay block-aligned."""
+        sq = 0
+        if self.config.share_prefix_kv and shared_prefix_len > 0:
+            bs = self.config.block_size
+            sq = (min(shared_prefix_len, len(history_tokens)) // bs) * bs
+        m = self.tree.match(lora_id, history_tokens, now, shared_len=sq)
         lora_resident = (
             m.lora_node is not None and m.lora_node.tier is Residency.HBM
         )
@@ -293,12 +330,16 @@ class CacheManager:
             host_hit_tokens=m.host_hit_tokens,
             history_tokens=len(history_tokens),
             swap_in_nodes=swap_in,
+            shared_prefix_len=sq,
+            shared_hit_tokens=m.shared_hbm_hit_tokens,
         )
         self.stats.lookups += 1
         self.stats.lora_hbm_hits += int(lora_resident)
         self.stats.kv_hbm_hit_tokens += m.hbm_hit_tokens
         self.stats.kv_host_hit_tokens += m.host_hit_tokens
         self.stats.history_tokens += len(history_tokens)
+        self.stats.shared_history_tokens += sq
+        self.stats.shared_hbm_hit_tokens += m.shared_hbm_hit_tokens
         return res
 
     @_checked
@@ -482,7 +523,11 @@ class CacheManager:
         """Query finished: fold its running KV blocks into the tree.
 
         The matched prefix is already covered by tree nodes; the new suffix
-        becomes one new node owning the (block-aligned part of the) running
+        is classified at the request's declared ``shared_prefix_len``
+        boundary — the adapter-independent part grows the shared trunk
+        (``lora_id=None``, under the deepest matched trunk node or the root)
+        and the adapter-divergent remainder forks under this adapter — each
+        span becoming a node owning the (block-aligned part of the) running
         blocks. Partial tail blocks are freed (vLLM-style: only whole blocks
         are shareable). With ``reuse_history_kv=False`` (S-LoRA) all running
         blocks are freed and nothing is inserted.
@@ -509,36 +554,66 @@ class CacheManager:
         spill = blocks[cache_tokens // bs :]
         if spill:
             self.kv_pool.release(Tier.HBM, spill)
-        node, absorbed = self.tree.insert_kv_ext(
-            parent=m.last_node,
-            tokens=suffix[:cache_tokens],
-            size_bytes=cache_tokens * self.config.kv_bytes_per_token,
-            num_blocks=len(keep_blocks),
-            tier=Residency.HBM,
-            now=now,
-        )
-        # leading suffix tokens absorbed by pre-existing nodes (divergence
-        # below a partially-matched edge): our recomputed blocks for that
-        # range are redundant — free them, the existing nodes own the data.
-        redundant = keep_blocks[: absorbed // bs]
-        keep_blocks = keep_blocks[absorbed // bs :]
-        if redundant:
-            self.kv_pool.release(Tier.HBM, redundant)
-        if not keep_blocks:
-            return node  # fully absorbed into existing nodes
-        node.hbm_blocks = keep_blocks
-        node.num_blocks = len(keep_blocks)
-        # Validity repair: the insert may have descended through ancestors
+        # classify the committed span at the shared-prefix boundary
+        # (lookup.shared_prefix_len is already block-quantized, and 0 when
+        # sharing is off): [matched, boundary) is trunk, the rest is fork
+        shared_take = 0
+        if lookup.shared_prefix_len > m.matched_tokens:
+            shared_take = min(
+                lookup.shared_prefix_len - m.matched_tokens, cache_tokens
+            )
+        spans: list[tuple[tuple, Optional[str]]] = []
+        if shared_take:
+            spans.append((suffix[:shared_take], None))
+        if shared_take < cache_tokens:
+            spans.append(
+                (suffix[shared_take:cache_tokens], m.lora_node.lora_id)
+            )
+        parent = m.last_node
+        node: Optional[Node] = None
+        attached: list[Node] = []
+        off = 0
+        for span_toks, span_lora in spans:
+            span_blocks = keep_blocks[off // bs : (off + len(span_toks)) // bs]
+            off += len(span_toks)
+            node, absorbed = self.tree.insert_kv_ext(
+                parent=parent,
+                tokens=span_toks,
+                size_bytes=len(span_toks) * self.config.kv_bytes_per_token,
+                num_blocks=len(span_blocks),
+                tier=Residency.HBM,
+                now=now,
+                lora_id=span_lora,
+            )
+            # leading span tokens absorbed by pre-existing nodes (divergence
+            # below a partially-matched edge, or another adapter already grew
+            # this trunk span): our recomputed blocks for that range are
+            # redundant — free them, the existing nodes own the data.
+            redundant = span_blocks[: absorbed // bs]
+            own = span_blocks[absorbed // bs :]
+            if redundant:
+                self.kv_pool.release(Tier.HBM, redundant)
+            if own:
+                node.hbm_blocks = own
+                node.num_blocks = len(own)
+                attached.append(node)
+            parent = node
+        # Validity repair: the inserts may have descended through ancestors
         # that were swapped out after this query's lookup (the query
-        # recomputed their KVs rather than matching them). Keeping the new
+        # recomputed their KVs rather than matching them). Keeping a new
         # node in HBM would violate the validity invariant — demote it.
+        # Shallow-first so a demoted trunk span cascades to the fork span
+        # just attached below it.
         if self.config.maintain_dependencies:
-            p = node.parent
-            while p is not None and p.kind is not NodeKind.ROOT:
-                if p.tier is not Residency.HBM:
-                    self._swap_out_node(node, now)
-                    break
-                p = p.parent
+            for n in attached:
+                if n.tier is not Residency.HBM:
+                    continue
+                p = n.parent
+                while p is not None and p.kind is not NodeKind.ROOT:
+                    if p.tier is not Residency.HBM:
+                        self._swap_out_node(n, now)
+                        break
+                    p = p.parent
         return node
 
     @_checked
@@ -714,16 +789,20 @@ class CacheManager:
 
     # -------------------------------------------------------------- metrics
     def hbm_breakdown(self) -> dict:
-        """HBM bytes by category (paper Fig. 14): history KV / state
-        snapshots / LoRA / running."""
+        """HBM bytes by category (paper Fig. 14): history KV (per-adapter) /
+        shared trunk KV / state snapshots / LoRA / running."""
         bb = self.config.block_bytes
         lora = sum(
             len(n.hbm_blocks) * bb
             for n in self.tree.iter_nodes({NodeKind.LORA})
         )
-        kv = sum(
-            len(n.hbm_blocks) * bb for n in self.tree.iter_nodes({NodeKind.KV})
-        )
+        kv = 0
+        shared = 0
+        for n in self.tree.iter_nodes({NodeKind.KV}):
+            if n.is_shared:
+                shared += len(n.hbm_blocks) * bb
+            else:
+                kv += len(n.hbm_blocks) * bb
         state = sum(
             len(n.hbm_blocks) * bb
             for n in self.tree.iter_nodes({NodeKind.STATE})
@@ -737,6 +816,7 @@ class CacheManager:
         return {
             "lora_bytes": lora,
             "history_kv_bytes": kv,
+            "shared_kv_bytes": shared,
             "state_snapshot_bytes": state,
             "running_kv_bytes": running,
             "total_bytes": total,

@@ -146,6 +146,16 @@ class CostModelScorer:
             # full-prefix prefill cost — not its (tiny, fixed) byte transfer
             # cost: one O(1) snapshot replaces an O(n) prefix recompute.
             cost = self.hw.recompute_cost(node.path_num_tokens())
+        elif node.is_shared:
+            # A shared trunk node is a dependency of fork KV under every
+            # adapter below it: dropping it invalidates all of them, so its
+            # retention value is the larger of its own reload cost and the
+            # summed per-fork recompute of the prefix it carries.
+            n_deps = max(1, len(self.tree.dependent_fork_loras(node)))
+            cost = max(
+                self.hw.transfer_cost(node.size_bytes),
+                n_deps * self.hw.recompute_cost(node.path_num_tokens()),
+            )
         else:
             cost = self.hw.transfer_cost(node.size_bytes)
         prob = self.tree.visit_prob(node, now)

@@ -1,16 +1,30 @@
-"""Usage-dependency tree (FASTLIBRA §4).
+"""Usage-dependency tree (FASTLIBRA §4) with a shared base-model trunk.
 
-A radix/trie structure over LoRAs and KV-cache prefixes:
+A radix/trie structure over LoRAs, shared base-model prefixes, and
+adapter-specific KV-cache prefixes:
 
 * layer 0: a single virtual root (always "resident"),
-* layer 1 ("second layer" in the paper, counting the root): one node per LoRA
-  adapter,
-* below each LoRA node: a radix trie of KV-cache prefixes produced by queries
-  that used that LoRA. Each root→leaf path is a conversation record; siblings
-  share their parent prefix. For recurrent architectures (RWKV-6, RG-LRU) the
-  prefix nodes are fixed-size **state snapshots** (:attr:`NodeKind.STATE`)
-  instead of per-token KV — same trie, same residency/eviction machinery,
-  but the payload is indivisible (see :meth:`DependencyTree._split`).
+* layer 1a: one node per LoRA adapter (the paper's "second layer"),
+* layer 1b: a **shared radix trunk** of adapter-independent KV nodes
+  (``lora_id=None``) directly under the root — base-model KV for spans the
+  request declared adapter-independent (system prompts computed with the
+  adapter inactive, A-LoRA / LRAgent style). Trunk nodes are cached ONCE and
+  may carry fork children under *multiple* adapters,
+* below each LoRA node — or forking off a trunk node via a composite
+  ``(lora_id, chunk)`` child key — a radix trie of adapter-divergent KV
+  prefixes produced by queries that used that LoRA. Each root→leaf path is a
+  conversation record; siblings share their parent prefix. For recurrent
+  architectures (RWKV-6, RG-LRU) the prefix nodes are fixed-size **state
+  snapshots** (:attr:`NodeKind.STATE`) instead of per-token KV — same trie,
+  same residency/eviction machinery, but the payload is indivisible (see
+  :meth:`DependencyTree._split`). STATE never lives on the shared trunk.
+
+The resulting shape is root → shared trunk (optional) → per-adapter forks,
+so a thousand adapters serving one product system prompt cache the prefix
+once instead of a thousand times. A trunk node's structural children are its
+dependents: evicting it invalidates forks under every adapter below it,
+which is why the cost model prices shared nodes by the *sum* of
+dependent-fork recompute (see ``cost_model.CostModelScorer``).
 
 Every node carries the statistics the cost model (§5.2) needs: visit
 frequency (exponentially decayed), last-recent-use time, size in blocks/bytes
@@ -20,9 +34,11 @@ invariant maintained by the cache manager is
     node.tier == HBM  ⇒  node.parent.tier == HBM          (validity invariant)
 
 which is exactly "no invalid KV": a KV prefix is only HBM-resident if its
-whole ancestry — including its LoRA — is. Swap-out therefore only targets
-*HBM leaves* (HBM nodes with no HBM children), swap-in only *host roots*
-(host nodes whose parent is already in HBM).
+whole ancestry — its LoRA, or the shared trunk above its fork point — is.
+A shared trunk node is valid with no LoRA ancestor at all (its parent chain
+terminates at the root). Swap-out therefore only targets *HBM leaves* (HBM
+nodes with no HBM children), swap-in only *host roots* (host nodes whose
+parent is already in HBM).
 
 The tree is pure control plane: payloads are opaque block-id lists owned by
 the manager. ``align`` (tokens) quantizes match/split points so node spans
@@ -63,6 +79,9 @@ class Residency(enum.Enum):
 
 _node_ids = itertools.count()
 
+# sentinel: insert_kv_ext inherits the parent's lora_id unless told otherwise
+_INHERIT: object = object()
+
 
 @dataclasses.dataclass
 class Node:
@@ -93,6 +112,12 @@ class Node:
     @property
     def num_tokens(self) -> int:
         return len(self.tokens)
+
+    @property
+    def is_shared(self) -> bool:
+        """Whether this is a shared base-model trunk node: adapter-independent
+        KV cached once under the root and forked per adapter below."""
+        return self.kind is NodeKind.KV and self.lora_id is None
 
     @property
     def is_leaf(self) -> bool:
@@ -165,7 +190,9 @@ class MatchResult:
     lora_node: Optional[Node]
     kv_nodes: list[Node]  # matched prefix chain, shallow → deep
     matched_tokens: int  # total tokens covered by kv_nodes
-    last_node: Node  # deepest matched node (LoRA node if no KV matched)
+    last_node: Node  # deepest matched node (LoRA node if no KV matched;
+    # the root when a shared span was declared but no trunk node matched)
+    shared_matched_tokens: int = 0  # leading tokens served by the shared trunk
 
     @property
     def hbm_hit_tokens(self) -> int:
@@ -174,6 +201,11 @@ class MatchResult:
     @property
     def host_hit_tokens(self) -> int:
         return sum(n.num_tokens for n in self.kv_nodes if n.tier is Residency.HOST)
+
+    @property
+    def shared_hbm_hit_tokens(self) -> int:
+        return sum(n.num_tokens for n in self.kv_nodes
+                   if n.is_shared and n.tier is Residency.HBM)
 
 
 class DependencyTree:
@@ -233,8 +265,30 @@ class DependencyTree:
         self._lora_nodes[lora_id] = node
         return node
 
-    def match(self, lora_id: str, tokens: Sequence[Token], now: float) -> MatchResult:
-        """DFS prefix match: LoRA node first, then longest KV prefix chain.
+    def _child_key(self, parent: Node, lora_id: Optional[str],
+                   tokens: TokenSeq) -> object:
+        """Child-map key for an edge starting with ``tokens`` under
+        ``parent``. Plain first-chunk keys everywhere except the fork point:
+        an adapter-labelled child of a shared trunk node (or of the root) is
+        keyed ``(lora_id, chunk)`` so forks under different adapters with
+        identical divergence tokens coexist as siblings."""
+        chunk = tuple(tokens[: self.align])
+        if (lora_id is not None and parent.kind is not NodeKind.LORA
+                and parent.lora_id is None):
+            return (lora_id, chunk)
+        return chunk
+
+    def match(self, lora_id: str, tokens: Sequence[Token], now: float,
+              shared_len: int = 0) -> MatchResult:
+        """DFS prefix match: shared trunk first (when the request declares a
+        ``shared_len`` adapter-independent prefix), then the adapter fork.
+
+        With ``shared_len=0`` this is the legacy walk — LoRA node first, then
+        the longest KV prefix chain under it. With ``shared_len>0`` the first
+        ``shared_len`` (align-quantized) tokens are matched against the
+        ``lora_id=None`` trunk under the root; only if the trunk fully covers
+        the declared span does the walk cross into this adapter's fork (via
+        the composite child key) and continue on plain keys below.
 
         Only counts a node as matched if the query's remaining tokens fully
         cover the node's edge label (partial edge coverage stops the walk; the
@@ -243,18 +297,51 @@ class DependencyTree:
         """
         self._bump_total(now)
         lnode = self._lora_nodes.get(lora_id)
-        if lnode is None:
-            return MatchResult(None, [], 0, self.root)
-        lnode.touch(now, self.decay_tau)
+        if lnode is not None:
+            lnode.touch(now, self.decay_tau)
         toks = tuple(tokens)
         # quantize usable prefix down to align so data-plane blocks stay whole
         usable = (len(toks) // self.align) * self.align
         toks = toks[:usable]
+        shared_usable = (min(max(shared_len, 0), len(toks)) // self.align
+                         ) * self.align
         chain: list[Node] = []
-        cur = lnode
         pos = 0
-        while pos < len(toks):
-            child = cur.children.get(toks[pos : pos + self.align])
+        if shared_usable:
+            cur: Node = self.root
+            while pos < shared_usable:
+                child = cur.children.get(toks[pos : pos + self.align])
+                if child is None:
+                    break
+                # never match a trunk edge past the declared shared span: the
+                # remainder of the prompt is adapter-divergent even if its
+                # tokens happen to coincide with a longer trunk edge
+                common = _common_prefix_len(child.tokens, toks[pos:shared_usable])
+                common = (common // self.align) * self.align
+                if common == 0:
+                    break
+                if common < len(child.tokens):
+                    child = self._split(child, common)
+                child.touch(now, self.decay_tau)
+                chain.append(child)
+                pos += common
+                cur = child
+        shared_matched = pos
+        if lnode is None:
+            return MatchResult(None, chain, pos,
+                               chain[-1] if chain else self.root,
+                               shared_matched_tokens=shared_matched)
+        if shared_usable:
+            # adapter fork hangs off the deepest trunk node (or the root when
+            # nothing shared is cached yet); reachable only once the trunk
+            # covered the whole declared span
+            cur = chain[-1] if chain else self.root
+            walk = pos == shared_usable
+        else:
+            cur = lnode
+            walk = True
+        while walk and pos < len(toks):
+            child = cur.children.get(self._child_key(cur, lora_id, toks[pos:]))
             if child is None:
                 break
             common = _common_prefix_len(child.tokens, toks[pos:])
@@ -269,7 +356,12 @@ class DependencyTree:
             chain.append(child)
             pos += common
             cur = child
-        return MatchResult(lnode, chain, pos, chain[-1] if chain else lnode)
+        if chain:
+            last = chain[-1]
+        else:
+            last = self.root if shared_usable else lnode
+        return MatchResult(lnode, chain, pos, last,
+                           shared_matched_tokens=shared_matched)
 
     def insert_kv(
         self,
@@ -304,6 +396,7 @@ class DependencyTree:
         tier: Residency,
         now: float,
         kind: NodeKind = NodeKind.KV,
+        lora_id: object = _INHERIT,
     ) -> tuple[Node, int]:
         """Like :meth:`insert_kv` but also returns the number of leading
         suffix tokens absorbed by pre-existing/split nodes (their data-plane
@@ -314,7 +407,12 @@ class DependencyTree:
         (``size_bytes=0, num_blocks=0``) and attach the indivisible snapshot
         payload to the *returned* node after allocating its blocks — the
         per-token proportional size split below is meaningless for a
-        fixed-size snapshot."""
+        fixed-size snapshot.
+
+        ``lora_id`` defaults to inheriting the parent's label. Pass ``None``
+        explicitly to grow the shared base-model trunk (parent must be the
+        root or another trunk node), or an adapter id to fork an
+        adapter-divergent branch off a trunk node."""
         toks = tuple(tokens)
         if not toks:
             raise ValueError("cannot insert empty KV edge")
@@ -322,16 +420,25 @@ class DependencyTree:
             raise ValueError(
                 f"edge length {len(toks)} not a multiple of align={self.align}"
             )
-        if parent.kind is NodeKind.ROOT:
-            raise ValueError("KV nodes must live under a LoRA branch")
+        if lora_id is _INHERIT:
+            lora_id = parent.lora_id
+        if parent.kind is NodeKind.ROOT and lora_id is not None:
+            raise ValueError(
+                "adapter-labelled KV must live under a LoRA or shared branch")
+        if lora_id is None and kind is not NodeKind.KV:
+            raise ValueError("shared trunk nodes must be KV kind")
+        if kind is NodeKind.STATE and parent.lora_id is None:
+            # a snapshot is the full model state INCLUDING the adapter's
+            # contribution, so it is never adapter-independent
+            raise ValueError("STATE snapshots cannot fork off the shared trunk")
         bytes_per_token = size_bytes / len(toks)
         absorbed = 0
         while True:
-            existing = parent.children.get(toks[: self.align])
+            existing = parent.children.get(self._child_key(parent, lora_id, toks))
             if existing is None:
                 node = Node(
                     kind=kind,
-                    lora_id=parent.lora_id,
+                    lora_id=lora_id,
                     tokens=toks,
                     tier=tier,
                     parent=parent,
@@ -343,7 +450,7 @@ class DependencyTree:
                 # cost model (prob=0) would evict exactly the nodes most
                 # likely to be re-hit on the next turn.
                 node.touch(now, self.decay_tau)
-                parent.children[toks[: self.align]] = node
+                parent.children[self._child_key(parent, lora_id, toks)] = node
                 return node, absorbed
             common = _common_prefix_len(existing.tokens, toks)
             common = (common // self.align) * self.align
@@ -391,11 +498,14 @@ class DependencyTree:
             raise PoolInvariantError(
                 f"cannot split detached node {node.node_id} (no parent)"
             )
-        node.parent.children[upper_tokens[: self.align]] = upper
+        # a fork root keeps its composite (lora_id, chunk) key in the shared
+        # parent's child map; the lower half re-keys plainly under the upper
+        node.parent.children[
+            self._child_key(node.parent, node.lora_id, upper_tokens)] = upper
         node.parent = upper
         node.tokens = lower_tokens
         node.size_bytes -= upper.size_bytes
-        upper.children[lower_tokens[: self.align]] = node
+        upper.children[self._child_key(upper, node.lora_id, lower_tokens)] = node
         # split block ownership at the aligned boundary (KV only: a state
         # snapshot is indivisible and stays entirely on the lower node)
         if node.kind is not NodeKind.STATE and (node.hbm_blocks or node.host_blocks):
@@ -428,7 +538,7 @@ class DependencyTree:
             del parent.children[node.node_id]
             del self._lora_nodes[node.lora_id]  # type: ignore[arg-type]
         else:
-            del parent.children[node.tokens[: self.align]]
+            del parent.children[self._child_key(parent, node.lora_id, node.tokens)]
         node.parent = None
 
     # ------------------------------------------------------------ traversals
@@ -441,6 +551,28 @@ class DependencyTree:
                 continue
             if kinds is None or n.kind in kinds:
                 yield n
+
+    def dependent_fork_loras(self, node: Node) -> set[str]:
+        """Adapter ids with fork KV depending on this shared trunk node.
+
+        Walks the subtree below ``node``; descends through deeper trunk
+        nodes (their forks depend on this node too) and stops at the first
+        adapter-labelled node on each path — everything below it belongs to
+        the same adapter. Evicting ``node`` invalidates all of these forks,
+        so the cost model prices it by their summed recompute."""
+        out: set[str] = set()
+        stack = list(node.children.values())
+        while stack:
+            n = stack.pop()
+            if n.lora_id is not None:
+                out.add(n.lora_id)
+                continue
+            stack.extend(n.children.values())
+        return out
+
+    def shared_nodes(self) -> list[Node]:
+        """All shared base-model trunk nodes (``lora_id=None`` KV)."""
+        return [n for n in self.iter_nodes({NodeKind.KV}) if n.is_shared]
 
     def hbm_leaves(self) -> list[Node]:
         """Swap-out candidates (paper §4.2: evict leaves only)."""

@@ -247,7 +247,7 @@ def _check_byte_accounting(mgr: "CacheManager", out: list[str]) -> None:
 
     bb = mgr.config.block_bytes
     bd = mgr.hbm_breakdown()
-    comp = (bd["lora_bytes"] + bd["history_kv_bytes"]
+    comp = (bd["lora_bytes"] + bd["history_kv_bytes"] + bd["shared_kv_bytes"]
             + bd["state_snapshot_bytes"] + bd["running_kv_bytes"])
     pool_used = sum(
         (pool.num_hbm_blocks - len(pool._free[Tier.HBM])) * bb
@@ -290,10 +290,11 @@ def _check_radix_structure(mgr: "CacheManager", out: list[str]) -> None:
                 if not child.tokens:
                     out.append(f"radix-structure: {child.kind.value} node "
                                f"#{child.node_id} has an empty edge label")
-                elif key != child.tokens[:align]:
-                    out.append(f"radix-structure: node #{child.node_id} "
-                               f"keyed by {key!r} but edge starts "
-                               f"{child.tokens[:align]!r}")
+                elif key != tree._child_key(n, child.lora_id, child.tokens):
+                    out.append(
+                        f"radix-structure: node #{child.node_id} keyed by "
+                        f"{key!r} but expected "
+                        f"{tree._child_key(n, child.lora_id, child.tokens)!r}")
                 if child.kind is NodeKind.KV and len(child.tokens) % align:
                     out.append(f"radix-structure: KV node #{child.node_id} "
                                f"edge length {len(child.tokens)} not a "
@@ -303,7 +304,9 @@ def _check_radix_structure(mgr: "CacheManager", out: list[str]) -> None:
 
 def _check_lora_registry(mgr: "CacheManager", out: list[str]) -> None:
     """I-lora: the LoRA registry and the second tree layer agree, and every
-    prefix node's lora_id matches the branch it hangs under."""
+    prefix node's lora_id is consistent with its parent — inherited inside a
+    branch, forking (adapter label under a shared parent) only at the trunk
+    boundary, and never adapter-labelled directly under the root."""
     from .dependency_tree import NodeKind
 
     tree = mgr.tree
@@ -317,17 +320,83 @@ def _check_lora_registry(mgr: "CacheManager", out: list[str]) -> None:
             out.append(f"lora-registry: {lid!r} node #{node.node_id} is not "
                        f"a child of the root")
     for n in tree.iter_nodes():
-        if n.kind is NodeKind.LORA and tree._lora_nodes.get(n.lora_id) is not n:
-            out.append(f"lora-registry: LoRA node #{n.node_id} "
-                       f"({n.lora_id!r}) missing from the registry")
-        if n.kind is not NodeKind.LORA and n.parent is not None:
-            top = n
-            while top.parent is not None and top.parent.kind is not NodeKind.ROOT:
-                top = top.parent
-            if n.lora_id != top.lora_id:
+        if n.kind is NodeKind.LORA:
+            if tree._lora_nodes.get(n.lora_id) is not n:
+                out.append(f"lora-registry: LoRA node #{n.node_id} "
+                           f"({n.lora_id!r}) missing from the registry")
+            continue
+        p = n.parent
+        if p is None:
+            continue
+        if p.kind is NodeKind.ROOT:
+            if n.lora_id is not None:
+                out.append(f"lora-registry: adapter-labelled node "
+                           f"#{n.node_id} (lora={n.lora_id!r}) directly "
+                           f"under the root")
+        elif p.lora_id is not None:
+            # inside a LoRA branch or an adapter fork: labels inherit
+            if n.lora_id != p.lora_id:
                 out.append(f"lora-registry: node #{n.node_id} labelled "
                            f"lora={n.lora_id!r} lives under branch "
-                           f"{top.lora_id!r}")
+                           f"{p.lora_id!r}")
+        elif n.lora_id is not None and n.lora_id not in tree._lora_nodes:
+            # fork root off the shared trunk: its adapter must be registered
+            out.append(f"lora-registry: fork root #{n.node_id} references "
+                       f"unregistered adapter {n.lora_id!r}")
+
+
+def _check_shared_prefix(mgr: "CacheManager", out: list[str]) -> None:
+    """I-shared: shared-trunk structure. Trunk nodes are KV-kind with
+    ``lora_id=None`` and live only under the root or another trunk node;
+    no trunk exists when sharing is disabled; STATE never forks off the
+    trunk; every fork root hangs off a live (root-reachable) shared parent
+    under its composite child key; and ``hbm_breakdown()`` splits
+    ``shared_kv_bytes`` exactly."""
+    from .dependency_tree import NodeKind
+
+    tree = mgr.tree
+    bb = mgr.config.block_bytes
+    shared_blocks = 0
+    for n in tree.iter_nodes():
+        if n.kind is not NodeKind.LORA and n.lora_id is None:
+            if n.kind is not NodeKind.KV:
+                out.append(f"shared-prefix: {n.kind.value} node #{n.node_id}"
+                           f" carries lora_id=None (trunk is KV-only)")
+                continue
+            shared_blocks += len(n.hbm_blocks)
+            if not mgr.config.share_prefix_kv:
+                out.append(f"shared-prefix: trunk node #{n.node_id} exists "
+                           f"with share_prefix_kv disabled")
+            p = n.parent
+            if p is not None and not (p.kind is NodeKind.ROOT
+                                      or (p.kind is NodeKind.KV
+                                          and p.lora_id is None)):
+                out.append(f"shared-prefix: trunk node #{n.node_id} under "
+                           f"non-trunk parent #{p.node_id} "
+                           f"({p.kind.value}, lora={p.lora_id!r})")
+        elif (n.parent is not None and n.parent.kind is NodeKind.KV
+              and n.parent.lora_id is None):
+            # adapter fork root off the shared trunk
+            if n.kind is NodeKind.STATE:
+                out.append(f"shared-prefix: STATE snapshot #{n.node_id} "
+                           f"forks off the shared trunk")
+            top = n.parent
+            while top.parent is not None:
+                top = top.parent
+            if top is not tree.root:
+                out.append(f"shared-prefix: fork root #{n.node_id} "
+                           f"references a detached shared parent "
+                           f"#{n.parent.node_id}")
+            key = tree._child_key(n.parent, n.lora_id, n.tokens)
+            if n.parent.children.get(key) is not n:
+                out.append(f"shared-prefix: fork root #{n.node_id} not "
+                           f"reachable from its shared parent under key "
+                           f"{key!r}")
+    want = shared_blocks * bb
+    got = mgr.hbm_breakdown()["shared_kv_bytes"]
+    if got != want:
+        out.append(f"shared-prefix: hbm_breakdown shared_kv_bytes={got} but "
+                   f"trunk nodes own {want} HBM bytes")
 
 
 def _check_hollow_state(mgr: "CacheManager", out: list[str]) -> None:
@@ -411,6 +480,7 @@ _CHECKS = (
     _check_byte_accounting,
     _check_radix_structure,
     _check_lora_registry,
+    _check_shared_prefix,
     _check_hollow_state,
     _check_pin_bookkeeping,
     _check_scorer_consistency,

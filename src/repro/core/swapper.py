@@ -143,6 +143,7 @@ def make_fastlibra(
     variant: str = "fastlibra",
     state_bytes: int = 0,
     sanitize: Optional[bool] = None,
+    share_prefix_kv: bool = True,
 ) -> tuple[CacheManager, CacheSwapper]:
     """Factory for FASTLIBRA and every paper baseline/ablation.
 
@@ -153,11 +154,16 @@ def make_fastlibra(
     snapshots instead of per-token KV — every variant keeps its own
     eviction/partitioning semantics over the snapshot nodes, and the
     proactive swapper moves whole snapshots through the same SwapOp plan.
+
+    ``share_prefix_kv=False`` disables the cross-adapter shared trunk:
+    declared shared spans are still base-computed but cached per adapter —
+    the differential baseline for the sharing refactor.
     """
     from .cache_manager import ManagerConfig
 
     base = dict(block_size=block_size, kv_bytes_per_token=kv_bytes_per_token,
-                state_bytes=state_bytes, sanitize=sanitize)
+                state_bytes=state_bytes, sanitize=sanitize,
+                share_prefix_kv=share_prefix_kv)
     sw = SwapperConfig()
     if variant == "fastlibra":
         cfg = ManagerConfig(**base)

@@ -36,6 +36,10 @@ class SimQuery:
     history: tuple[int, ...]  # tokens reusable from previous turns
     new_tokens: tuple[int, ...]  # this turn's fresh prompt tokens
     output_tokens: tuple[int, ...]  # the (deterministic) generated reply
+    # leading prompt tokens that are adapter-INDEPENDENT (a product-wide
+    # system prompt shared by every adapter): computed with the adapter
+    # inactive, cacheable once on the shared trunk. 0 = legacy traces.
+    shared_prefix_len: int = 0
 
     @property
     def prompt(self) -> tuple[int, ...]:
@@ -61,6 +65,11 @@ class TraceConfig:
     interval: float = 30.0  # rate-modulation interval (s)
     distribution: str = "zipf"  # zipf | uniform | distinct | skewed
     skew_sigma: float = 100.0  # for skewed-x
+    # cross-adapter shared system prompt: every conversation's prompt opens
+    # with this many adapter-independent tokens (one product-wide system
+    # prompt common to ALL adapters), and each query carries the matching
+    # shared_prefix_len. 0 (default) keeps traces byte-identical to before.
+    shared_system_prompt_len: int = 0
 
 
 _SCENARIOS = {
@@ -85,6 +94,13 @@ def _template_tokens(lora_idx: int, n: int) -> tuple[int, ...]:
     instruction) — reused across all queries of that adapter, which is what
     cross-query prefix caching exploits in single-turn scenarios."""
     base = -(lora_idx + 1) * 10_000  # negative range: never collides with convs
+    return tuple(base - i for i in range(n))
+
+
+def _shared_system_tokens(n: int) -> tuple[int, ...]:
+    """The product-wide system prompt common to ALL adapters — one token
+    range far below every per-LoRA template and conversation range."""
+    base = -(10**9)
     return tuple(base - i for i in range(n))
 
 
@@ -146,7 +162,9 @@ def generate_trace(cfg: TraceConfig) -> list[SimQuery]:
             lora = sampler.sample(tt)
             n_turns = rng.randint(*sc["turns"])
             cursor = 0
-            history: tuple[int, ...] = _template_tokens(lora, sc["template"])
+            shared = _shared_system_tokens(cfg.shared_system_prompt_len)
+            history: tuple[int, ...] = (
+                shared + _template_tokens(lora, sc["template"]))
             arr = tt
             for turn in range(n_turns):
                 user_n = rng.randint(*sc["user"])
@@ -163,6 +181,7 @@ def generate_trace(cfg: TraceConfig) -> list[SimQuery]:
                         history=history,
                         new_tokens=new,
                         output_tokens=out,
+                        shared_prefix_len=len(shared),
                     )
                 )
                 history = history + new + out

@@ -15,11 +15,15 @@ def sgmv_ref(
     adapter_ids: Array,  # (B,) int32
     scale: float = 1.0,
 ) -> Array:
-    """Multi-LoRA delta: Δ[b] = (x[b] @ A[id[b]]) @ B[id[b]] · scale."""
-    a = jnp.take(lora_a, adapter_ids, axis=0)
-    b = jnp.take(lora_b, adapter_ids, axis=0)
+    """Multi-LoRA delta: Δ[b] = (x[b] @ A[id[b]]) @ B[id[b]] · scale.
+
+    A negative id marks a base-model row (shared-prefix span): Δ = 0."""
+    ids = jnp.maximum(adapter_ids, 0)
+    a = jnp.take(lora_a, ids, axis=0)
+    b = jnp.take(lora_b, ids, axis=0)
     h = jnp.einsum("bsd,bdr->bsr", x.astype(jnp.float32), a.astype(jnp.float32))
     out = jnp.einsum("bsr,bro->bso", h, b.astype(jnp.float32)) * scale
+    out = out * (adapter_ids >= 0).astype(out.dtype)[:, None, None]
     return out.astype(x.dtype)
 
 

@@ -53,6 +53,12 @@ def sgmv(
     bs = min(block_s, S)
     bo = min(block_o, d_out)
     grid = (B, pl.cdiv(S, bs), pl.cdiv(d_out, bo))
+    # a NEGATIVE id marks a base-model row (shared-prefix span computed with
+    # the adapter inactive — see models.common.lora_delta): clamp so the
+    # prefetch-gathered BlockSpec index stays in range, then zero the row's
+    # delta after the call. Parity with the jnp reference is tested.
+    live = adapter_ids >= 0
+    adapter_ids = jnp.maximum(adapter_ids, 0)
     out = pl.pallas_call(
         functools.partial(_sgmv_kernel, scale=scale),
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -68,4 +74,4 @@ def sgmv(
         out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
         interpret=interpret,
     )(adapter_ids, x, lora_a, lora_b)
-    return out
+    return out * live.astype(out.dtype)[:, None, None]

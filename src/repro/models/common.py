@@ -97,16 +97,24 @@ def lora_delta(
     x:           (B, S, d_in)
     lora_a:      (n_slots, d_in, r)    stacked adapter A matrices
     lora_b:      (n_slots, r, d_out)   stacked adapter B matrices
-    adapter_ids: (B,) int32            slot index per sequence
+    adapter_ids: (B,) int32            slot index per sequence; a NEGATIVE id
+                                       marks a base-model row (Δ masked to 0)
     Returns      (B, S, d_out)         Δ = (x @ A_i) @ B_i · scale
+
+    Base-model rows are how the engine computes a request's declared
+    adapter-independent shared prefix (A-LoRA semantics): the row runs with
+    the adapter inactive, so its KV is exactly reusable across adapters.
 
     This is the gather-einsum reference; ``repro.kernels.sgmv`` provides the
     TPU Pallas kernel with identical semantics (tested against this).
     """
-    a = jnp.take(lora_a, adapter_ids, axis=0)  # (B, d_in, r)
-    b = jnp.take(lora_b, adapter_ids, axis=0)  # (B, r, d_out)
+    ids = jnp.maximum(adapter_ids, 0)  # clamp so the gather stays in range
+    a = jnp.take(lora_a, ids, axis=0)  # (B, d_in, r)
+    b = jnp.take(lora_b, ids, axis=0)  # (B, r, d_out)
     h = jnp.einsum("bsd,bdr->bsr", x, a)
-    return jnp.einsum("bsr,bro->bso", h, b) * scale
+    delta = jnp.einsum("bsr,bro->bso", h, b) * scale
+    live = (adapter_ids >= 0).astype(delta.dtype)[:, None, None]
+    return delta * live
 
 
 def causal_mask(q_pos: Array, k_pos: Array, k_valid: Array | None = None) -> Array:

@@ -114,6 +114,12 @@ class EngineConfig:
         default_factory=_default_schedule_mode)  # "mixed" | "alternate"
     step_token_budget: int = 128  # max real tokens per mixed step
     target_step_ms: float = 0.0  # >0: budget servos to this step latency
+    # ---- cross-adapter prefix sharing (core/dependency_tree.py trunk).
+    # Requests declaring shared_prefix_len > 0 run that span with the
+    # adapter INACTIVE (base-model rows) either way; this knob only decides
+    # whether the resulting KV is cached once on the shared trunk (True) or
+    # per adapter (False — the differential baseline).
+    share_prefix_kv: bool = True
 
 
 class ServingEngine:
@@ -170,6 +176,7 @@ class ServingEngine:
             block_size=config.block_size,
             variant=config.variant,
             state_bytes=state_bytes,
+            share_prefix_kv=config.share_prefix_kv,
         )
         pool_blocks = self.manager.kv_pool.num_hbm_blocks
         host_blocks = self.manager.kv_pool.num_host_blocks
@@ -374,6 +381,7 @@ class ServingEngine:
         by_slot = {r.slot: r for r in prefill_rows}
         chunks = dict(plan.prefill_chunks)
         clipped = self._clamp_state_chunks(chunks, by_slot)
+        clipped += self._clamp_shared_chunks(chunks, by_slot)
         transitioned = self._run_chunks(by_slot, chunks, decode_rows)
         # catch-up decode: rows that completed prefill THIS step get their
         # second token from one S=1 dispatch, matching the per-request step
@@ -399,6 +407,26 @@ class ServingEngine:
             q = r.state_capture_at
             if r.staged_state is None and r.prefill_pos < q < r.prefill_pos + c:
                 chunks[s] = q - r.prefill_pos
+                clipped += c - chunks[s]
+        return clipped
+
+    def _shared_bound(self, req: Request) -> int:
+        """Absolute prompt position where ``req``'s declared adapter-
+        independent span ends (0 = none)."""
+        return min(max(req.shared_prefix_len, 0), len(req.prompt))
+
+    def _clamp_shared_chunks(self, chunks: dict[int, int],
+                             by_slot: dict[int, Request]) -> int:
+        """A chunk may not straddle a row's shared-prefix boundary: the SGMV
+        adapter id is per ROW per dispatch, so base-model tokens (inside the
+        declared shared span) and adapter tokens cannot share one chunk.
+        Shrinks chunks in place; returns the clipped token count."""
+        clipped = 0
+        for s, c in list(chunks.items()):
+            r = by_slot[s]
+            b = self._shared_bound(r)
+            if r.prefill_pos < b < r.prefill_pos + c:
+                chunks[s] = b - r.prefill_pos
                 clipped += c - chunks[s]
         return clipped
 
@@ -474,7 +502,9 @@ class ServingEngine:
                 lk = self.manager.lookup_state(req.adapter_id, history, now)
                 matched = lk.state_tokens
             else:
-                lk = self.manager.lookup(req.adapter_id, history, now)
+                lk = self.manager.lookup(
+                    req.adapter_id, history, now,
+                    shared_prefix_len=req.shared_prefix_len)
                 matched = lk.match.matched_tokens
             adm = self.manager.admit(lk, now)
             if adm.queued:
@@ -524,10 +554,14 @@ class ServingEngine:
                 block_ids = [b for n in m.kv_nodes for b in n.hbm_blocks]
                 k, v = self.kv_pool.gather(block_ids)
                 self._write_dense(slot, 0, k, v)
-        # ensure adapter slot present
-        aid = self.adapters.slot_of(req.adapter_id)
-        if aid is None:
-            aid = self.adapters.load(req.adapter_id)
+        # ensure adapter slot present — unless the request starts inside its
+        # shared span: base-model rows need no slot, so a shared-prefix hit
+        # lets prefill begin while the adapter is still cold (_adapter_ids
+        # lazily reloads once the row crosses the fork boundary)
+        if prefix_len >= self._shared_bound(req):
+            aid = self.adapters.slot_of(req.adapter_id)
+            if aid is None:
+                aid = self.adapters.load(req.adapter_id)
         self._set_len(slot, prefix_len)
         req.prefill_pos = prefix_len
         if self.cfg.prefill_mode == "eager":
@@ -570,16 +604,24 @@ class ServingEngine:
         the boundary, capturing the state in between (the recurrence is
         destructive — there is no recovering an interior state afterwards)."""
         slot = req.slot
-        spans = [(req.prefill_pos, len(req.prompt))]
+        # span cut points: the snapshot boundary (recurrent layouts) and the
+        # shared-prefix boundary (base-model rows cannot share a dispatch
+        # with adapter rows — the SGMV id is per row per call)
+        cuts = set()
         q = req.state_capture_at
         if (self._state_reusable and req.staged_state is None
                 and req.prefill_pos < q):
-            spans = [(req.prefill_pos, q), (q, len(req.prompt))]
+            cuts.add(q)
+        sb = self._shared_bound(req)
+        if req.prefill_pos < sb < len(req.prompt):
+            cuts.add(sb)
+        points = [req.prefill_pos] + sorted(cuts) + [len(req.prompt)]
+        spans = list(zip(points, points[1:]))
         logits = None
         for lo, hi in spans:
             suffix = jnp.asarray(req.prompt[lo:hi], jnp.int32)[None, :]
             start = jnp.asarray(self.cache["len"])
-            ids = self._adapter_ids()
+            ids = self._adapter_ids(base_rows=(slot,) if hi <= sb else ())
             single = {k: v for k, v in self.cache.items()}
             logits, new_cache = self.model.extend(
                 self.params, single, self._pad_rows(suffix, slot),
@@ -616,6 +658,7 @@ class ServingEngine:
         chunks = {r.slot: min(len(r.prompt) - r.prefill_pos, self._prefill_chunk)
                   for r in rows}
         self._clamp_state_chunks(chunks, {r.slot: r for r in rows})
+        self._clamp_shared_chunks(chunks, {r.slot: r for r in rows})
         self._run_chunks({r.slot: r for r in rows}, chunks, [])
         return sum(chunks.values())
 
@@ -732,15 +775,28 @@ class ServingEngine:
                 # DROP: nothing physical to do
 
     # ------------------------------------------------------------- helpers
-    def _adapter_ids(self) -> jax.Array:
+    def _adapter_ids(self, base_rows: tuple[int, ...] = ()) -> jax.Array:
         """Per-row adapter slots for the SGMV path.
 
         A request whose adapter was evicted mid-flight must NOT silently run
         through slot 0 (someone else's LoRA): reload it, charging the
-        cold-start to the request. Raises if no slot can be freed."""
+        cold-start to the request. Raises if no slot can be freed.
+
+        Rows still prefilling inside their declared shared span — and any
+        slot in ``base_rows`` (the eager path's explicit per-span override) —
+        get id -1: the LoRA delta is masked to zero (base-model row), so the
+        span's KV is adapter-independent AND the dispatch needs no adapter
+        slot at all (a prefill can start from a shared-prefix hit while its
+        adapter is still cold; the reload is deferred to the first span past
+        the boundary)."""
         ids = np.zeros((self.cfg.max_batch_slots,), np.int32)
         for r in self._slot_req:
             if r is not None:
+                if r.slot in base_rows or (
+                        r.phase is Phase.PREFILLING
+                        and r.prefill_pos < self._shared_bound(r)):
+                    ids[r.slot] = -1
+                    continue
                 s = self.adapters.slot_of(r.adapter_id)
                 if s is None:
                     s = self._reload_adapter(r)

@@ -23,6 +23,12 @@ row's next-token logits are gathered at its own last *real* position.
 :func:`assemble_batch` additionally accepts decode rows (``true_lens == 1``)
 so the Sarathi-style mixed scheduler (serving/scheduler.py) can pack prefill
 chunks and decode tokens into ONE batched ``extend`` per engine step.
+
+Adapter-id contract: ``adapter_ids`` is per ROW per dispatch. A NEGATIVE id
+marks a base-model row — the SGMV delta is masked to zero, which is how the
+engine computes a request's declared adapter-independent shared prefix
+(cross-adapter KV sharing). A chunk therefore may never straddle the shared
+boundary; the engine clamps chunks to land on it (``_clamp_shared_chunks``).
 """
 
 from __future__ import annotations

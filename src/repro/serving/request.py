@@ -34,6 +34,12 @@ class Request:
     kv_coldstart: float = 0.0
     matched_tokens: int = 0
     hbm_hit_tokens: int = 0
+    # cross-adapter prefix sharing: leading prompt tokens that are
+    # adapter-independent (e.g. a product system prompt). The engine computes
+    # them with the adapter INACTIVE (base-model rows) so their KV is
+    # bit-identical across adapters and cacheable on the shared trunk. 0 =
+    # whole prompt is adapter-specific (legacy behavior).
+    shared_prefix_len: int = 0
     # engine bookkeeping
     slot: int = -1
     lookup: object = None

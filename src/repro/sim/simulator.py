@@ -52,6 +52,9 @@ class SimConfig:
     #               budget remains, so iteration time stays bounded.
     schedule_mode: str = "alternate"
     step_token_budget: int = 512  # per-iteration token budget (mixed mode)
+    # cross-adapter prefix sharing: cache declared adapter-independent spans
+    # once on the shared trunk (False = per-adapter baseline)
+    share_prefix_kv: bool = True
 
 
 @dataclasses.dataclass
@@ -177,6 +180,7 @@ class ServingSimulator:
             hardware=hw_model,
             variant=self.cfg.variant,
             state_bytes=deployed.state_snapshot_bytes,
+            share_prefix_kv=self.cfg.share_prefix_kv,
         )
         # register every LoRA in the trace (host-resident at t=0)
         for lid in sorted({q.lora_id for q in trace}):
@@ -278,7 +282,9 @@ class ServingSimulator:
                     lk = self.manager.lookup_state(q.lora_id, q.prompt[:-1], now)
                     matched = lk.state_tokens
                 else:
-                    lk = self.manager.lookup(q.lora_id, q.prompt[:-1], now)
+                    lk = self.manager.lookup(
+                        q.lora_id, q.prompt[:-1], now,
+                        shared_prefix_len=q.shared_prefix_len)
                     matched = lk.match.matched_tokens
                 adm = self.manager.admit(lk, now)
                 if adm.queued:

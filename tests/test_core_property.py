@@ -96,7 +96,11 @@ op_st = st.one_of(
 # arbitrary order, with swapper sweeps in between. Nothing before this
 # fuzzed partially-completed queries racing the eviction machinery.
 mixed_op_st = st.one_of(
-    st.tuples(st.just("begin"), lora_st, tokens_st, st.integers(1, 16)),
+    # begin carries a declared shared-prefix length: 0 = plain per-adapter
+    # query, >0 = the leading span commits to the cross-adapter trunk, so
+    # trunk inserts/splits/forks interleave with every other op family
+    st.tuples(st.just("begin"), lora_st, tokens_st, st.integers(1, 16),
+              st.integers(0, 16)),
     st.tuples(st.just("grow"), st.integers(0, 7), st.integers(1, 8)),
     st.tuples(st.just("commit"), st.integers(0, 7)),
     st.tuples(st.just("abort"), st.integers(0, 7)),
@@ -110,7 +114,7 @@ def _check_breakdown(mgr, hbm_bytes):
     capacity. Any drift (a leaked block, a double-count across categories)
     shows up as an inequality here at the op that introduced it."""
     bd = mgr.hbm_breakdown()
-    used = (bd["lora_bytes"] + bd["history_kv_bytes"]
+    used = (bd["lora_bytes"] + bd["history_kv_bytes"] + bd["shared_kv_bytes"]
             + bd["state_snapshot_bytes"] + bd["running_kv_bytes"])
     pool_used = mgr.pool.stats().hbm_used * mgr.config.block_bytes
     assert used == pool_used, (bd, pool_used)
@@ -137,8 +141,8 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
     for op in ops:
         now += 0.05
         if op[0] == "begin":
-            _, lid, toks, new_toks = op
-            lk = mgr.lookup(lid, toks, now)
+            _, lid, toks, new_toks, shared = op
+            lk = mgr.lookup(lid, toks, now, shared_prefix_len=shared)
             adm = mgr.admit(lk, now)
             if adm.queued:
                 mgr.drain_ops()
@@ -201,7 +205,7 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
 # per adapter deployment — the trie/eviction machinery is shared).
 state_mixed_op_st = st.one_of(
     st.tuples(st.just("kv"), st.sampled_from(["a", "b"]), tokens_st,
-              st.integers(1, 12)),
+              st.integers(1, 12), st.integers(0, 12)),
     st.tuples(st.just("snap"), st.sampled_from(["c", "d"]), tokens_st),
     st.tuples(st.just("slookup"), st.sampled_from(["c", "d"]), tokens_st),
     st.tuples(st.just("tick"), st.floats(0.1, 5.0), st.floats(0.0, 24.0)),
@@ -230,8 +234,8 @@ def test_state_nodes_interleaved_with_kv_and_lora_ops(ops, hbm_blocks):
     for op in ops:
         now += 0.05
         if op[0] == "kv":
-            _, lid, toks, new_toks = op
-            lk = mgr.lookup(lid, toks, now)
+            _, lid, toks, new_toks, shared = op
+            lk = mgr.lookup(lid, toks, now, shared_prefix_len=shared)
             adm = mgr.admit(lk, now)
             if adm.queued:
                 mgr.drain_ops()

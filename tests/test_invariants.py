@@ -176,6 +176,104 @@ def test_detects_lora_registry_break():
     _expect(mgr, "lora-registry")
 
 
+# ------------------------------------------- shared-prefix trunk (I-shared)
+def _one_shared_query(mgr, lid="a", toks=tuple(range(12)), shared=8,
+                      qid="s0", now=1.0):
+    """Full lifecycle of a query whose first ``shared`` tokens are declared
+    adapter-independent — commits a trunk span + an adapter fork."""
+    lk = mgr.lookup(lid, toks, now, shared_prefix_len=shared)
+    adm = mgr.admit(lk, now)
+    assert not adm.queued
+    assert mgr.allocate_running(qid, len(toks) + 4, now) is not None
+    mgr.commit(qid, lk, toks + tuple(range(500, 504)), now)
+    mgr.unpin(adm.pinned)
+    return lk
+
+
+def _trunk_and_fork(mgr):
+    shared = [n for n in mgr.tree.shared_nodes()]
+    assert shared, "no trunk node committed"
+    trunk = shared[0]
+    forks = [c for c in trunk.children.values() if c.lora_id is not None]
+    assert forks, "no adapter fork under the trunk"
+    return trunk, forks[0]
+
+
+def test_shared_query_passes_and_splits_bytes():
+    mgr, _ = _mgr(sanitize=True)
+    _one_shared_query(mgr, lid="a", qid="s0")
+    _one_shared_query(mgr, lid="b", qid="s1", now=2.0)
+    trunk, fork = _trunk_and_fork(mgr)
+    assert trunk.lora_id is None and fork.lora_id in ("a", "b")
+    bd = mgr.hbm_breakdown()
+    assert bd["shared_kv_bytes"] == len(trunk.hbm_blocks) * BLOCK_BYTES > 0
+    check_pool_invariants(mgr)  # must not raise
+
+
+def test_detects_trunk_with_sharing_disabled():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    mgr.config.share_prefix_kv = False  # trunk now structurally illegal
+    _expect(mgr, "share_prefix_kv disabled")
+
+
+def test_detects_non_kv_trunk_node():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    trunk, _ = _trunk_and_fork(mgr)
+    trunk.kind = NodeKind.STATE  # lora_id=None must imply KV kind
+    _expect(mgr, "trunk is KV-only")
+
+
+def test_detects_state_fork_off_trunk():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    _, fork = _trunk_and_fork(mgr)
+    fork.kind = NodeKind.STATE
+    _expect(mgr, "forks off the shared trunk")
+
+
+def test_detects_trunk_under_non_trunk_parent():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    trunk, _ = _trunk_and_fork(mgr)
+    trunk.parent = mgr.tree.lora_node("a")
+    _expect(mgr, "under non-trunk parent")
+
+
+def test_detects_fork_with_detached_shared_parent():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    trunk, _ = _trunk_and_fork(mgr)
+    trunk.parent = None  # trunk unhooked from the root: forks dangle
+    _expect(mgr, "detached shared parent")
+
+
+def test_detects_fork_key_mismatch():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    trunk, fork = _trunk_and_fork(mgr)
+    key = mgr.tree._child_key(trunk, fork.lora_id, fork.tokens)
+    del trunk.children[key]
+    trunk.children[("ghost", (9, 9, 9, 9))] = fork
+    _expect(mgr, "not reachable from its shared parent")
+
+
+def test_detects_shared_byte_split_drift():
+    mgr, _ = _mgr()
+    _one_shared_query(mgr)
+    orig = mgr.hbm_breakdown()
+
+    def skewed():
+        bd = dict(orig)
+        bd["shared_kv_bytes"] += BLOCK_BYTES  # misclassified bytes
+        bd["history_kv_bytes"] -= BLOCK_BYTES
+        return bd
+
+    mgr.hbm_breakdown = skewed
+    _expect(mgr, "shared-prefix: hbm_breakdown shared_kv_bytes")
+
+
 def test_detects_nan_score():
     mgr, _ = _mgr()
     _one_query(mgr)
@@ -268,8 +366,13 @@ def test_seeded_fuzz_sanitized_exact_accounting():
             if op <= 1:  # begin
                 lid = rng.choice("abc")
                 toks = tuple(rng.randrange(8) for _ in range(rng.randrange(24)))
-                lk = (mgr.lookup_state if state and lid == "c" else mgr.lookup)(
-                    lid, toks, now)
+                if state and lid == "c":
+                    lk = mgr.lookup_state(lid, toks, now)
+                else:
+                    # shared spans interleave with plain per-adapter queries
+                    lk = mgr.lookup(lid, toks, now,
+                                    shared_prefix_len=rng.choice(
+                                        (0, 0, 4, 8, 12)))
                 adm = mgr.admit(lk, now)
                 if adm.queued:
                     mgr.drain_ops()
@@ -306,6 +409,7 @@ def test_seeded_fuzz_sanitized_exact_accounting():
             # inside the mutating call; this pins breakdown == pool)
             bd = mgr.hbm_breakdown()
             used = (bd["lora_bytes"] + bd["history_kv_bytes"]
+                    + bd["shared_kv_bytes"]
                     + bd["state_snapshot_bytes"] + bd["running_kv_bytes"])
             assert used == mgr.pool.stats().hbm_used * mgr.config.block_bytes
         for name, lk, pinned, toks, need in open_qs:

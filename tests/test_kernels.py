@@ -44,6 +44,31 @@ def test_sgmv_matches_ref(B, S, d_in, r, d_out, N, dtype):
     )
 
 
+def test_sgmv_negative_id_masks_base_rows():
+    """id = -1 marks a base-model row (shared-prefix span): its delta must
+    be exactly zero in the kernel, the reference, AND models.common — the
+    cross-adapter KV-sharing contract."""
+    from repro.models.common import lora_delta
+
+    ks = jax.random.split(KEY, 3)
+    x = rand(ks[0], (4, 16, 64), jnp.float32)
+    a = rand(ks[1], (3, 64, 8), jnp.float32) * 0.1
+    b = rand(ks[2], (3, 8, 64), jnp.float32) * 0.1
+    ids = jnp.asarray([1, -1, 2, -1], jnp.int32)
+    got = sgmv(x, a, b, ids, scale=0.5, interpret=True)
+    want = ref.sgmv_ref(x, a, b, ids, scale=0.5)
+    jnp_ref = lora_delta(x, a, b, ids, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp_ref),
+                               rtol=2e-5, atol=2e-4)
+    assert np.all(np.asarray(got)[1] == 0) and np.all(np.asarray(got)[3] == 0)
+    live = sgmv(x, a, b, jnp.asarray([1, 1, 2, 2], jnp.int32),
+                scale=0.5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got)[0], np.asarray(live)[0])
+    np.testing.assert_array_equal(np.asarray(got)[2], np.asarray(live)[2])
+
+
 # -------------------------------------------------------------- paged attn
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(

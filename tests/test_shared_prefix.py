@@ -1,0 +1,289 @@
+"""Cross-adapter prefix sharing: shared trunk + adapter forks.
+
+Four pinned layers:
+  P1  control plane: a declared shared span commits to a ``lora_id=None``
+      trunk under the root; a DIFFERENT adapter's lookup hits it
+      (block-quantized), forks diverge below it, and the baseline
+      (``share_prefix_kv=False``) keeps everything per adapter
+  P2  eviction economics: the swapper only ever offers leaves, so forks
+      demote before the trunk they depend on; the cost model prices a
+      multi-fork trunk node above a single-fork one; validity holds across
+      trunk host-roundtrips
+  P3  end-to-end differential: with a common system prompt across N
+      adapters, shared-trunk serving is token-identical to the per-adapter
+      baseline for GQA AND MLA layouts under mixed/alternate/eager modes —
+      with a strictly higher HBM KV hit rate
+  P4  the cold-adapter start: a row inside its declared shared span
+      dispatches with adapter id -1 and needs no loaded adapter slot
+"""
+
+import itertools
+
+import jax
+import pytest
+
+from repro import configs
+from repro.core import NodeKind, Residency, make_fastlibra
+from repro.serving import EngineConfig, Phase, Request, ServingEngine
+
+KVB = 64
+BS = 4
+BLOCK_BYTES = KVB * BS
+
+
+def _mgr(share=True, hbm_blocks=48, **kw):
+    mgr, sw = make_fastlibra(
+        hbm_bytes=hbm_blocks * BLOCK_BYTES,
+        host_bytes=128 * BLOCK_BYTES,
+        kv_bytes_per_token=KVB,
+        block_size=BS,
+        sanitize=True,
+        share_prefix_kv=share,
+        **kw,
+    )
+    for lid in "abcd":
+        mgr.register_lora(lid, BLOCK_BYTES, now=0.0)
+    return mgr, sw
+
+
+def _serve(mgr, lid, toks, shared, qid, now):
+    lk = mgr.lookup(lid, toks, now, shared_prefix_len=shared)
+    adm = mgr.admit(lk, now)
+    assert not adm.queued
+    assert mgr.allocate_running(qid, len(toks) + 4, now) is not None
+    mgr.commit(qid, lk, toks + tuple(range(900, 904)), now)
+    mgr.unpin(adm.pinned)
+    return lk
+
+
+SYS = tuple(range(-50, -38))  # 12 shared system-prompt tokens
+
+
+# ------------------------------------------------------------ P1: control
+def test_trunk_commit_and_cross_adapter_hit():
+    mgr, _ = _mgr()
+    tail_a = SYS + tuple(range(100, 110))
+    _serve(mgr, "a", tail_a, shared=len(SYS), qid="q0", now=1.0)
+    trunk = mgr.tree.shared_nodes()
+    assert trunk and all(n.lora_id is None for n in trunk)
+    # trunk holds exactly the block-quantized shared span
+    q = (len(SYS) // BS) * BS
+    assert sum(n.num_tokens for n in trunk) == q
+    # a DIFFERENT adapter with the same system prompt hits the trunk
+    tail_b = SYS + tuple(range(200, 212))
+    lk = mgr.lookup("b", tail_b, 2.0, shared_prefix_len=len(SYS))
+    assert lk.match.matched_tokens == q
+    assert lk.shared_hit_tokens == q
+    assert mgr.stats.shared_hit_rate() > 0
+    adm = mgr.admit(lk, 2.0)
+    mgr.unpin(adm.pinned)
+
+
+def test_forks_diverge_below_trunk_and_bytes_split():
+    mgr, _ = _mgr()
+    for i, lid in enumerate("ab"):
+        _serve(mgr, lid, SYS + tuple(range(100 * (i + 1), 100 * (i + 1) + 10)),
+               shared=len(SYS), qid=f"q{i}", now=1.0 + i)
+    deepest = max(mgr.tree.shared_nodes(), key=lambda n: n.path_num_tokens())
+    forks = [c for c in deepest.children.values() if c.lora_id is not None]
+    assert sorted(c.lora_id for c in forks) == ["a", "b"]
+    assert mgr.tree.dependent_fork_loras(deepest) == {"a", "b"}
+    bd = mgr.hbm_breakdown()
+    q = (len(SYS) // BS) * BS
+    assert bd["shared_kv_bytes"] == q * KVB
+    assert bd["history_kv_bytes"] > 0  # fork spans accounted separately
+    mgr.check_invariants()
+
+
+def test_disabled_sharing_keeps_per_adapter_caching():
+    mgr, _ = _mgr(share=False)
+    for i, lid in enumerate("ab"):
+        _serve(mgr, lid, SYS + tuple(range(100 * (i + 1), 100 * (i + 1) + 10)),
+               shared=len(SYS), qid=f"q{i}", now=1.0 + i)
+    assert mgr.tree.shared_nodes() == []
+    assert mgr.hbm_breakdown()["shared_kv_bytes"] == 0
+    # adapter b's lookup must NOT see adapter a's system-prompt KV
+    lk = mgr.lookup("c", SYS + (7, 8, 9, 10), 3.0, shared_prefix_len=len(SYS))
+    assert lk.match.matched_tokens == 0
+    adm = mgr.admit(lk, 3.0)
+    mgr.unpin(adm.pinned)
+
+
+def test_identical_adapter_repeat_still_matches_through_trunk():
+    mgr, _ = _mgr()
+    toks = SYS + tuple(range(300, 312))
+    _serve(mgr, "a", toks, shared=len(SYS), qid="q0", now=1.0)
+    lk = mgr.lookup("a", toks, 2.0, shared_prefix_len=len(SYS))
+    # full prefix (trunk + own fork) matches, block-quantized
+    assert lk.match.matched_tokens == (len(toks) // BS) * BS
+    adm = mgr.admit(lk, 2.0)
+    mgr.unpin(adm.pinned)
+
+
+# --------------------------------------------------------- P2: eviction
+def test_fork_demotes_before_trunk_and_cost_scales_with_forks():
+    mgr, _ = _mgr()
+    for i, lid in enumerate("abc"):
+        _serve(mgr, lid, SYS + tuple(range(100 * (i + 1), 100 * (i + 1) + 8)),
+               shared=len(SYS), qid=f"q{i}", now=1.0 + i)
+    trunk = max(mgr.tree.shared_nodes(), key=lambda n: n.path_num_tokens())
+    # leaf-only eviction: a trunk node with HBM forks is never a candidate
+    assert trunk not in mgr.evict_candidates()
+    # multi-fork trunk prices at least as high as any single fork's span
+    three = mgr.scorer.retain_eval(trunk, 4.0)
+    forks = [c for c in trunk.children.values() if c.lora_id is not None]
+    mgr._swap_out_node(forks[0], 4.0)
+    mgr._swap_out_node(forks[1], 4.0)
+    mgr.drain_ops()
+    one = mgr.scorer.retain_eval(trunk, 4.0)
+    assert three >= one  # n_dep_forks shrank from 3 to 1
+    mgr.check_invariants()
+
+
+def test_trunk_host_roundtrip_preserves_validity_and_rehits():
+    mgr, _ = _mgr()
+    _serve(mgr, "a", SYS + tuple(range(100, 108)), shared=len(SYS),
+           qid="q0", now=1.0)
+    # demote the whole branch leaf-first (what the swapper sweep does)
+    for _ in range(16):
+        cands = mgr.evict_candidates()
+        kv = [n for n in cands if n.kind is NodeKind.KV]
+        if not kv:
+            break
+        mgr._swap_out_node(kv[0], 2.0)
+    mgr.drain_ops()
+    assert all(n.tier is not Residency.HBM for n in mgr.tree.shared_nodes())
+    mgr.check_invariants()
+    # a new adapter's shared lookup finds the host trunk; admit swaps it in
+    lk = mgr.lookup("b", SYS + (5, 6, 7, 8), 3.0, shared_prefix_len=len(SYS))
+    q = (len(SYS) // BS) * BS
+    assert lk.match.matched_tokens == q
+    assert lk.shared_hit_tokens == 0  # host hit, not an HBM hit
+    adm = mgr.admit(lk, 3.0)
+    assert not adm.queued
+    assert all(n.tier is Residency.HBM for n in lk.match.kv_nodes)
+    mgr.drain_ops()
+    mgr.unpin(adm.pinned)
+    mgr.check_invariants()
+
+
+# ----------------------------------------------------- P3: differential
+ARCHS = ["qwen3-0.6b", "deepseek-v2-lite-16b"]  # GQA, MLA
+MODES = (("eager", "alternate"), ("bucketed", "mixed"),
+         ("bucketed", "alternate"))
+
+_ids = itertools.count()
+
+N_ADAPTERS = 4
+ESYS = tuple(range(500, 510))  # 10-token common system prompt
+
+
+def _engine(arch, mode, schedule, share):
+    cfg = configs.reduced(configs.get(arch))
+    ecfg = EngineConfig(
+        hbm_bytes=8 << 20, host_bytes=32 << 20, block_size=4,
+        max_batch_slots=4, max_seq_len=96, prefill_mode=mode,
+        prefill_chunk=8, prefill_min_bucket=4,
+        schedule_mode=schedule, step_token_budget=24,
+        share_prefix_kv=share,
+    )
+    eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(7))
+    for i in range(N_ADAPTERS):
+        eng.register_adapter(f"lora-{i}")
+    return eng
+
+
+def _workload():
+    """One request per adapter, all opening with the SAME system prompt."""
+    return [
+        Request(f"sp{next(_ids)}", f"lora-{i}",
+                ESYS + tuple(range(40 + 7 * i, 52 + 7 * i)),
+                max_new_tokens=3, shared_prefix_len=len(ESYS))
+        for i in range(N_ADAPTERS)
+    ]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mode,schedule", MODES)
+def test_shared_trunk_token_identical_to_per_adapter_baseline(
+        arch, mode, schedule):
+    outs = {}
+    rates = {}
+    for share in (True, False):
+        eng = _engine(arch, mode, schedule, share)
+        reqs = _workload()
+        for r in reqs:
+            eng.submit(r)
+            eng.run()  # serialize so every later adapter sees a warm trunk
+        outs[share] = [tuple(r.generated) for r in reqs]
+        rates[share] = eng.manager.stats.kv_hit_rate()
+        if share:
+            # adapters 1..N-1 hit trunk KV another adapter computed
+            assert eng.manager.stats.shared_hit_rate() > 0
+            assert all(r.matched_tokens >= (len(ESYS) // 4) * 4
+                       for r in reqs[1:])
+        else:
+            assert eng.manager.stats.shared_hbm_hit_tokens == 0
+            assert all(r.matched_tokens == 0 for r in reqs[1:])
+        eng.manager.check_invariants()
+    assert outs[True] == outs[False], (
+        f"{arch}/{mode}/{schedule}: shared-trunk caching changed generation")
+    assert rates[True] > rates[False], (
+        f"{arch}: sharing must strictly raise the HBM KV hit rate")
+
+
+def test_shared_and_unshared_agree_under_concurrent_mixed_batches():
+    """All adapters in flight at once (chunks + decode rows interleave in
+    mixed batches, chunk clamped at the shared boundary)."""
+    outs = {}
+    for share in (True, False):
+        eng = _engine("qwen3-0.6b", "bucketed", "mixed", share)
+        reqs = _workload()
+        for r in reqs:
+            eng.submit(r)
+        rep = eng.run()
+        assert rep.n_finished == len(reqs)
+        outs[share] = [tuple(r.generated) for r in reqs]
+        eng.manager.check_invariants()
+    assert outs[True] == outs[False]
+
+
+def test_fully_shared_prompt_and_oversized_declaration():
+    """shared_prefix_len >= len(prompt): the whole prompt runs as base rows
+    and the first sampled token comes from base logits — identically in
+    both configurations."""
+    outs = {}
+    for share in (True, False):
+        eng = _engine("qwen3-0.6b", "bucketed", "mixed", share)
+        r1 = Request(f"sp{next(_ids)}", "lora-0", ESYS, max_new_tokens=3,
+                     shared_prefix_len=len(ESYS) + 99)
+        r2 = Request(f"sp{next(_ids)}", "lora-1", ESYS, max_new_tokens=3,
+                     shared_prefix_len=len(ESYS) + 99)
+        eng.submit(r1)
+        eng.run()
+        eng.submit(r2)
+        eng.run()
+        outs[share] = (tuple(r1.generated), tuple(r2.generated))
+        eng.manager.check_invariants()
+    assert outs[True] == outs[False]
+
+
+# --------------------------------------------------- P4: cold-adapter row
+def test_shared_span_rows_dispatch_without_adapter_slot():
+    eng = _engine("qwen3-0.6b", "bucketed", "mixed", share=True)
+    req = Request("cold0", "lora-3", ESYS + (1, 2, 3, 4), max_new_tokens=2,
+                  shared_prefix_len=len(ESYS))
+    req.phase = Phase.PREFILLING
+    req.prefill_pos = 0
+    req.slot = 1
+    eng._slot_req[1] = req
+    assert eng.adapters.slot_of("lora-3") is None  # registered, never loaded
+    import numpy as np
+    ids = np.asarray(eng._adapter_ids())
+    assert ids[1] == -1
+    assert eng.adapters.slot_of("lora-3") is None  # no reload was forced
+    # past the boundary the row needs (and lazily loads) its adapter
+    req.prefill_pos = len(ESYS)
+    ids = np.asarray(eng._adapter_ids())
+    assert ids[1] >= 0
+    assert eng.adapters.slot_of("lora-3") is not None

@@ -321,6 +321,12 @@ def test_snapshot_survives_host_roundtrip_end_to_end():
     mgr._swap_out_node(snap[0], now=eng._now())
     eng._execute_swaps(mgr.drain_ops())
     assert snap[0].tier is Residency.HOST
+    # the idle prefetch sweep would race the admission: with HBM usage under
+    # the lower threshold, the swapper's next tick could swap the snapshot
+    # back BEFORE the warm request looks it up, so no SWAP_IN lands on its
+    # critical path and kv_coldstart is (flakily) 0. Pin the scenario: the
+    # hit must demand-page the snapshot in.
+    eng.swapper.config.enabled = False
     warm = _req(prompt)
     eng.submit(warm)
     eng.run()
