@@ -24,8 +24,14 @@ adapters × one common system prompt, served with the shared-trunk cache
 (``share_prefix_kv=True``) vs the per-adapter baseline — HBM KV hit-rate
 gain plus paired-median TTFT ratio.
 
+``run_mixed_slo`` adds the bursty mixed-SLO scenario: a batch-tier burst
+that fills every slot plus interactive-tier arrivals mid-burst, served with
+SLO-tiered admission + cost-model preemption vs the same trace with tier
+metadata stripped (FCFS) — paired-median interactive TTFT ratio and batch
+throughput ratio.
+
 CLI: ``PYTHONPATH=src python benchmarks/prefill_bench.py
-[--quick] [--recurrent] [--shared-prefix]``.
+[--quick] [--recurrent] [--shared-prefix] [--mixed-slo]``.
 """
 
 from __future__ import annotations
@@ -395,6 +401,118 @@ def run_shared_prefix(out, prefix: str = "prefill/shared",
              "shared_minus_unshared;target>0")
 
 
+def run_mixed_slo(out, prefix: str = "prefill/slo", repeats: int = 4,
+                  n_batch: int = 20, n_inter: int = 4,
+                  plen: int = 96, ilen: int = 24) -> None:
+    """Bursty mixed-SLO scenario: SLO-tiered admission + preemption vs FCFS.
+
+    Each repeat floods the engine with a burst of batch-tier requests (long
+    prompts, 32-token decodes, ~2.5x the slot count so a deep backlog
+    queues behind the running wave), steps until the burst owns the
+    machine, then injects short interactive-tier requests mid-burst. The tiered engine ranks them ahead in the cost-ranked queue,
+    preempts batch victims — whose computed KV demotes through the two-tier
+    pool and resumes token-identically — and fast-lanes their prefill; the
+    FCFS baseline serves the IDENTICAL trace with the tier metadata
+    stripped, so interactive requests wait behind the burst. Reported:
+    interactive mean TTFT per config, the per-repeat paired-median
+    tiered/FCFS interactive TTFT ratio (target < 1.0), and the batch
+    makespan-derived throughput ratio (target >= 0.9: preemption must not
+    melt batch throughput)."""
+    import statistics
+
+    from repro.serving.request import PRIORITY_INTERACTIVE
+
+    engines = {True: _engine("mixed"), False: _engine("mixed")}
+    # burn-in: one throwaway burst per engine compiles every shape on both
+    # the plain path and (tiered) the preempt/resume path before timing
+    # the warm burst matches the timed burst EXACTLY (same n_batch, same
+    # lengths): a smaller warm burst stays under pool pressure and leaves
+    # the first demotion/transfer shapes to compile inside the timed region
+    rng = np.random.RandomState(41)
+    for tiered, eng in engines.items():
+        for i in range(n_batch):
+            p = tuple(int(t) for t in rng.randint(1, 900, size=plen))
+            eng.submit(Request(f"slowarm{tiered}-b{i}",
+                               f"lora-{i % N_LORAS}", p, max_new_tokens=32))
+        for _ in range(3):
+            eng.step()
+        for i in range(n_inter):
+            p = tuple(int(t) for t in rng.randint(1, 900, size=ilen))
+            kw = (dict(priority=PRIORITY_INTERACTIVE,
+                       deadline=eng.now() + 0.05) if tiered else {})
+            eng.submit(Request(f"slowarm{tiered}-i{i}",
+                               f"lora-{i % N_LORAS}", p,
+                               max_new_tokens=8, **kw))
+        eng.run(max_steps=100_000)
+        eng.reset_metrics()
+
+    rng = np.random.RandomState(17)
+    inter_ttfts: dict[bool, list[float]] = {True: [], False: []}
+    ttft_ratios: list[float] = []
+    tput_ratios: list[float] = []
+    preemptions = 0
+    for rep in range(repeats):
+        # one workload per repeat, served by BOTH configs (paired); fresh
+        # token ranges per repeat keep every prefix cold across repeats
+        bprompts = [tuple(int(t) for t in rng.randint(1, 900, size=plen))
+                    for _ in range(n_batch)]
+        iprompts = [tuple(int(t) for t in rng.randint(1, 900, size=ilen))
+                    for _ in range(n_inter)]
+        # ABBA counterbalancing across repeats: CPU drift cancels in pairs
+        order = (True, False) if rep % 2 == 0 else (False, True)
+        rep_ttft: dict[bool, float] = {}
+        rep_makespan: dict[bool, float] = {}
+        for tiered in order:
+            eng = engines[tiered]
+            batch = [Request(f"slo{rep}-{tiered}-b{i}",
+                             f"lora-{i % N_LORAS}", p, max_new_tokens=32)
+                     for i, p in enumerate(bprompts)]
+            for r in batch:
+                eng.submit(r)
+            # let the burst occupy the machine before the interactive
+            # arrivals land mid-flight
+            for _ in range(3):
+                eng.step()
+            inter = []
+            for i, p in enumerate(iprompts):
+                kw = (dict(priority=PRIORITY_INTERACTIVE,
+                           deadline=eng.now() + 0.05) if tiered else {})
+                r = Request(f"slo{rep}-{tiered}-i{i}",
+                            f"lora-{(n_batch + i) % N_LORAS}", p,
+                            max_new_tokens=8, **kw)
+                inter.append(r)
+                eng.submit(r)
+            eng.run(max_steps=100_000)
+            assert all(r.ttft is not None for r in inter + batch)
+            rep_ttft[tiered] = statistics.fmean(r.ttft for r in inter)
+            rep_makespan[tiered] = (max(r.finish_time for r in batch)
+                                    - min(r.submit_time for r in batch))
+            inter_ttfts[tiered].append(rep_ttft[tiered])
+            if tiered:
+                preemptions += eng.manager.stats.preemptions
+            eng.reset_metrics()
+        if rep_ttft[False] > 0:
+            ttft_ratios.append(rep_ttft[True] / rep_ttft[False])
+        if rep_makespan[True] > 0:
+            # same token workload both ways: throughput ratio is the
+            # inverted makespan ratio
+            tput_ratios.append(rep_makespan[False] / rep_makespan[True])
+    ttft_ratio = statistics.median(ttft_ratios) if ttft_ratios else 0.0
+    tput_ratio = statistics.median(tput_ratios) if tput_ratios else 0.0
+    out.emit(f"{prefix}/tiered/interactive_mean_ttft",
+             statistics.fmean(inter_ttfts[True]) * 1e6,
+             f"n={repeats * n_inter};preemptions={preemptions}")
+    out.emit(f"{prefix}/fcfs/interactive_mean_ttft",
+             statistics.fmean(inter_ttfts[False]) * 1e6,
+             f"n={repeats * n_inter}")
+    out.emit(f"{prefix}/summary/tiered_over_fcfs_interactive_ttft",
+             ttft_ratio,
+             f"paired_median;target<1.0;reps={len(ttft_ratios)}")
+    out.emit(f"{prefix}/summary/batch_throughput_ratio", tput_ratio,
+             f"tiered_over_fcfs;paired_median;target>=0.9;"
+             f"preemptions={preemptions}")
+
+
 def run_sim_modes(out, prefix: str = "prefill/sim") -> None:
     """Simulator cross-check: the same mode split at Llama-7B scale."""
     try:
@@ -430,6 +548,8 @@ def main() -> None:
                     help="run ONLY the recurrent snapshot-reuse scenario")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="run ONLY the cross-adapter prefix-sharing scenario")
+    ap.add_argument("--mixed-slo", action="store_true",
+                    help="run ONLY the bursty mixed-SLO tiering scenario")
     args = ap.parse_args()
     out = CsvOut()
     if args.recurrent:
@@ -441,10 +561,18 @@ def main() -> None:
                           slen=16 if args.quick else 24,
                           tail=24 if args.quick else 40)
         return
+    if args.mixed_slo:
+        run_mixed_slo(out, repeats=2 if args.quick else 4,
+                      n_batch=14 if args.quick else 20,
+                      n_inter=3 if args.quick else 4,
+                      plen=64 if args.quick else 96,
+                      ilen=16 if args.quick else 24)
+        return
     run(out, n=12 if args.quick else N_REQUESTS)
     if not args.quick:
         run_recurrent(out)
         run_shared_prefix(out)
+        run_mixed_slo(out)
     if not (args.quick or args.no_sim):
         run_sim_modes(out)
 

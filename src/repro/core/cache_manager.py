@@ -33,7 +33,12 @@ import functools
 from typing import Optional, Sequence
 
 from .block_pool import BlockPool, PoolExhausted, Tier
-from .cost_model import CostModelScorer, HardwareModel, LRUScorer
+from .cost_model import (
+    CostModelScorer,
+    HardwareModel,
+    LRUScorer,
+    admission_ttft_estimate,
+)
 from .dependency_tree import (
     DependencyTree,
     MatchResult,
@@ -172,6 +177,9 @@ class ManagerStats:
     swap_out_count: int = 0
     drops: int = 0
     queue_events: int = 0
+    # SLO-tier preemptions: victims whose running KV/state was folded into
+    # the tree (demotable through the swapper) instead of discarded
+    preemptions: int = 0
     # recurrent-state snapshot lookups (symmetric with the KV counters:
     # hit tokens are the prefix boundary a resumable snapshot covers)
     state_lookups: int = 0
@@ -261,6 +269,10 @@ class CacheManager:
         # per-query running KV blocks (not yet in the tree)
         self._running: dict[str, list[int]] = {}
         self._running_tokens: dict[str, int] = {}
+        # queries preempted via preempt_running and not yet readmitted: the
+        # sanitizer asserts they left no running-block residue; a fresh
+        # allocate_running for the same id (the resume) clears the mark
+        self._preempted: set[str] = set()
         # every swap op (incl. demand evictions inside admit/allocate) is
         # recorded here; the data plane / simulator drains and executes them.
         # Demand-eviction SWAP_OUTs are on the requesting query's critical
@@ -488,6 +500,9 @@ class CacheManager:
         or decode growth). Returns None if HBM is exhausted even after
         eviction (query must queue / be preempted)."""
         nblocks = self.kv_blocks_for(num_tokens)
+        # a resume allocation clears the preempted mark (the query is live
+        # again and legitimately holds running blocks)
+        self._preempted.discard(query_id)
         have = self._running.setdefault(query_id, [])
         cur_tokens = self._running_tokens.get(query_id, 0)
         need = self.kv_blocks_for(cur_tokens + num_tokens) - len(have)
@@ -615,6 +630,91 @@ class CacheManager:
                         break
                     p = p.parent
         return node
+
+    @_checked
+    def preempt_running(
+        self,
+        query_id: str,
+        lookup: Optional[LookupResult],
+        computed_tokens: Sequence[int],
+        now: float,
+    ) -> Optional[Node]:
+        """Demote a preempted victim's running KV into the dependency tree.
+
+        The SLO-tier preemption path: instead of discarding the victim's
+        computed work (vLLM-style recompute preemption), its block-aligned
+        running KV folds into the tree via the commit path — the blocks
+        become ordinary unpinned leaf nodes the scorer can rank and the
+        two-tier swapper can demote to host under pressure, and the victim's
+        resume lookup matches them back (token-identical resume, swap-in
+        instead of recompute). ``computed_tokens`` is the full token prefix
+        whose KV the victim actually computed (prompt so far + generated
+        minus the pending decode input).
+
+        With ``lookup=None`` (recurrent layouts, whose prefix cache is state
+        snapshots — the caller folds a snapshot via :meth:`commit_state`
+        separately) or ``reuse_history_kv=False`` (S-LoRA ablation) the
+        running blocks are simply released. Either way the query is recorded
+        in the preempted registry for the sanitizer's residue check; a later
+        :meth:`allocate_running` for the same id (the resume) clears it.
+        """
+        node: Optional[Node] = None
+        if lookup is not None and self.config.reuse_history_kv:
+            node = self.commit(query_id, lookup, computed_tokens, now)
+        else:
+            self.abort_running(query_id)
+        self._preempted.add(query_id)
+        self.stats.preemptions += 1
+        return node
+
+    def estimate_ttft(self, lora_id: str, history_tokens: Sequence[int],
+                      shared_prefix_len: int = 0) -> float:
+        """READ-ONLY time-to-first-token estimate for a waiting request.
+
+        Prices the unmatched prefix recompute, host->HBM transfer of any
+        host-resident matched KV (or resumable state snapshot), and the
+        adapter cold-start — via :func:`admission_ttft_estimate` over a
+        non-mutating :meth:`DependencyTree.probe_chain` walk. Deliberately
+        NOT :meth:`lookup`: the admission order probes every waiting request
+        every step, and lookup touches visit counters / splits edges, which
+        would skew the cost model's statistics in proportion to queue depth.
+        """
+        toks = tuple(history_tokens)
+        sq = 0
+        if self.config.share_prefix_kv and shared_prefix_len > 0:
+            bs = self.config.block_size
+            sq = (min(shared_prefix_len, len(toks)) // bs) * bs
+        chain = self.tree.probe_chain(lora_id, toks, shared_len=sq)
+        host_bytes = 0
+        if self.config.state_bytes > 0:
+            # recurrent prefix cache: the resume point is the deepest
+            # fully-covered payload snapshot; one whole snapshot transfers
+            matched = 0
+            pos = 0
+            tier = None
+            for node, cov in chain:
+                pos += cov
+                if (node.kind is NodeKind.STATE and node.has_payload
+                        and cov == node.num_tokens):
+                    matched, tier = pos, node.tier
+            if tier is Residency.HOST:
+                host_bytes += self.config.state_bytes
+        else:
+            matched = 0
+            for node, cov in chain:
+                matched += cov
+                if node.tier is Residency.HOST:
+                    host_bytes += cov * self.config.kv_bytes_per_token
+        lnode = self.tree.lora_node(lora_id)
+        lora_resident = lnode is not None and lnode.tier is Residency.HBM
+        # +1: prefill always recomputes the final prompt token for logits
+        return admission_ttft_estimate(
+            self.hw,
+            new_tokens=len(toks) + 1 - matched,
+            host_kv_bytes=host_bytes,
+            lora_resident=lora_resident,
+            lora_bytes=lnode.size_bytes if lnode is not None else 0,
+        )
 
     @_checked
     def commit_state(

@@ -69,6 +69,32 @@ class HardwareModel:
         return n_tokens * self.prefill_s_per_token
 
 
+def admission_ttft_estimate(
+    hw: HardwareModel,
+    *,
+    new_tokens: int,
+    host_kv_bytes: int = 0,
+    lora_resident: bool = True,
+    lora_bytes: int = 0,
+) -> float:
+    """Estimated time-to-first-token for a WAITING request (SLO admission).
+
+    The same components Eqs. 3–6 price for retention, viewed from the other
+    side: prefix recompute for the unmatched suffix, swap-in transfer for any
+    host-resident matched KV/state, and the adapter cold-start when its LoRA
+    is not HBM-resident. Deadline-aware admission ranks waiting requests by
+    ``deadline - now - estimate`` (least slack first within a priority tier),
+    so a request whose cached prefix makes it cheap to serve jumps ahead of
+    one that must recompute everything.
+    """
+    cost = hw.recompute_cost(max(0, new_tokens))
+    if host_kv_bytes > 0:
+        cost += hw.transfer_cost(host_kv_bytes)
+    if not lora_resident and lora_bytes > 0:
+        cost += hw.transfer_cost(lora_bytes)
+    return cost
+
+
 def expected_lora_demand(probs: list[float], batch_size: float) -> float:
     """Eq. 3 — expected number of distinct LoRAs present in a recent batch.
 

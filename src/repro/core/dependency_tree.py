@@ -363,6 +363,67 @@ class DependencyTree:
         return MatchResult(lnode, chain, pos, last,
                            shared_matched_tokens=shared_matched)
 
+    def probe_chain(self, lora_id: str, tokens: Sequence[Token],
+                    shared_len: int = 0) -> list[tuple[Node, int]]:
+        """READ-ONLY prefix-match estimate: (node, covered tokens) pairs.
+
+        Mirrors :meth:`match`'s trunk-then-fork walk but never touches visit
+        counters, never bumps the decayed total, and never splits a
+        partially-covered edge — the deadline-aware admission order probes
+        every waiting request every step, and a mutating probe would skew the
+        cost model's visit-frequency statistics (and restructure the radix
+        tree) in proportion to queue depth. The walk stops at the first
+        partially-covered edge after counting its align-quantized common
+        prefix, which is exactly where a real match would also stop after its
+        split — so the covered-token total matches what admission will see
+        (modulo forks hanging below a would-be split point: a rare, strict
+        underestimate, acceptable for a cost estimate).
+        """
+        toks = tuple(tokens)
+        usable = (len(toks) // self.align) * self.align
+        toks = toks[:usable]
+        shared_usable = (min(max(shared_len, 0), len(toks)) // self.align
+                         ) * self.align
+        out: list[tuple[Node, int]] = []
+        pos = 0
+        cur: Node = self.root
+        if shared_usable:
+            while pos < shared_usable:
+                child = cur.children.get(toks[pos : pos + self.align])
+                if child is None:
+                    break
+                common = _common_prefix_len(child.tokens, toks[pos:shared_usable])
+                common = (common // self.align) * self.align
+                if common == 0:
+                    break
+                out.append((child, common))
+                pos += common
+                if common < len(child.tokens):
+                    return out  # partial edge: a real match stops here too
+                cur = child
+        lnode = self._lora_nodes.get(lora_id)
+        if lnode is None:
+            return out
+        if shared_usable:
+            if pos != shared_usable:
+                return out  # trunk didn't cover the span: no fork walk
+        else:
+            cur = lnode
+        while pos < len(toks):
+            child = cur.children.get(self._child_key(cur, lora_id, toks[pos:]))
+            if child is None:
+                break
+            common = _common_prefix_len(child.tokens, toks[pos:])
+            common = (common // self.align) * self.align
+            if common == 0:
+                break
+            out.append((child, common))
+            pos += common
+            if common < len(child.tokens):
+                break
+            cur = child
+        return out
+
     def insert_kv(
         self,
         parent: Node,

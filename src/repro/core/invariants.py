@@ -472,6 +472,27 @@ def _check_scorer_consistency(mgr: "CacheManager", out: list[str]) -> None:
                        f"#{n.node_id} which is not a host root")
 
 
+def _check_preempted_residue(mgr: "CacheManager", out: list[str]) -> None:
+    """I-preempt: a preempted query left nothing behind in the running set.
+
+    ``preempt_running`` demotes the victim's computed KV into the tree (or
+    releases it) and records the query in ``_preempted``; until a resume
+    ``allocate_running`` clears the mark, the query must hold zero running
+    blocks and zero running-token bookkeeping — a leak here is exactly the
+    "preemption discards the bookkeeping but not the blocks" failure mode
+    this family exists to catch. The folded KV itself must be demotable:
+    preemption never leaves it pinned (ref_count is the engine's admission
+    pin, which the engine drops before preempting)."""
+    for qid in mgr._preempted:
+        if mgr._running.get(qid):
+            out.append(f"preempted-residue: query {qid!r} was preempted but "
+                       f"still holds {len(mgr._running[qid])} running blocks")
+        if mgr._running_tokens.get(qid, 0):
+            out.append(f"preempted-residue: query {qid!r} was preempted but "
+                       f"still has running token count "
+                       f"{mgr._running_tokens[qid]}")
+
+
 _CHECKS = (
     _check_pool_partition,
     _check_tier_residency,
@@ -484,6 +505,7 @@ _CHECKS = (
     _check_hollow_state,
     _check_pin_bookkeeping,
     _check_scorer_consistency,
+    _check_preempted_residue,
 )
 
 

@@ -40,6 +40,11 @@ class SimQuery:
     # system prompt shared by every adapter): computed with the adapter
     # inactive, cacheable once on the shared trunk. 0 = legacy traces.
     shared_prefix_len: int = 0
+    # SLO tier: higher = more latency-sensitive (0 = batch). Admission is
+    # priority-strict; only strictly-lower tiers are preemptable.
+    priority: int = 0
+    # absolute first-token deadline on the trace clock (None = no SLO)
+    deadline: Optional[float] = None
 
     @property
     def prompt(self) -> tuple[int, ...]:
@@ -70,6 +75,12 @@ class TraceConfig:
     # prompt common to ALL adapters), and each query carries the matching
     # shared_prefix_len. 0 (default) keeps traces byte-identical to before.
     shared_system_prompt_len: int = 0
+    # mixed-SLO tiering: this fraction of conversations is interactive
+    # (priority 1) with a first-token deadline of arrival +
+    # interactive_ttft_slo; the rest stay batch tier (priority 0, no
+    # deadline). 0.0 (default) keeps traces byte-identical to before.
+    interactive_fraction: float = 0.0
+    interactive_ttft_slo: float = 1.0
 
 
 _SCENARIOS = {
@@ -160,6 +171,11 @@ def generate_trace(cfg: TraceConfig) -> list[SimQuery]:
             conv_counter += 1
             conv_id = conv_counter
             lora = sampler.sample(tt)
+            # SLO tier per conversation (every turn inherits it): the guard
+            # short-circuits so interactive_fraction=0 draws nothing from
+            # the rng stream and legacy traces stay byte-identical
+            interactive = (cfg.interactive_fraction > 0
+                           and rng.random() < cfg.interactive_fraction)
             n_turns = rng.randint(*sc["turns"])
             cursor = 0
             shared = _shared_system_tokens(cfg.shared_system_prompt_len)
@@ -182,6 +198,9 @@ def generate_trace(cfg: TraceConfig) -> list[SimQuery]:
                         new_tokens=new,
                         output_tokens=out,
                         shared_prefix_len=len(shared),
+                        priority=1 if interactive else 0,
+                        deadline=(arr + cfg.interactive_ttft_slo
+                                  if interactive else None),
                     )
                 )
                 history = history + new + out

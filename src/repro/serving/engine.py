@@ -58,7 +58,7 @@ from ..lora import AdapterStore
 from ..models import build_model
 from .metrics import ServingReport, summarize
 from .prefill import BatchPrefill, assemble_batch, make_buckets
-from .request import Phase, Request
+from .request import PRIORITY_BATCH, Phase, Request
 from .scheduler import TokenBudgetController, plan_step
 
 
@@ -217,6 +217,7 @@ class ServingEngine:
         self._free_slots = deque(range(B))
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
+        self.aborted: list[Request] = []
         self._decode_fn = jax.jit(
             lambda params, lora, cache, tokens, ids: self.model.extend(
                 params, cache, tokens, cache["len"], lora=lora, adapter_ids=ids
@@ -254,6 +255,7 @@ class ServingEngine:
         from .prefill import PrefillStats
 
         self.finished.clear()
+        self.aborted.clear()
         self.prefill.stats = PrefillStats()
         self._step_count = 0
         self._step_ms_sum = 0.0
@@ -295,8 +297,46 @@ class ServingEngine:
 
     # ------------------------------------------------------------- requests
     def submit(self, request: Request) -> None:
-        request.submit_time = self._now()
+        """Queue a request. A caller-provided ``submit_time`` (trace replay
+        with backdated arrivals) is honored; only an unset one is stamped
+        with the engine clock — queue/TTFT metrics and the deadline-aware
+        admission order all measure against this value."""
+        if request.submit_time is None:
+            request.submit_time = self._now()
         self.waiting.append(request)
+
+    def abort(self, request: Request) -> None:
+        """Release everything ``request`` holds — admission pins, running
+        blocks, decode slot, staged state — and move it to ``Phase.ABORTED``.
+        Safe in any phase; FINISHED/ABORTED requests are left untouched. The
+        request keeps whatever tokens it produced but never counts as
+        finished; ``run()`` drains leftover in-flight requests through this
+        path when its step budget runs out."""
+        if request.phase in (Phase.FINISHED, Phase.ABORTED):
+            return
+        if request.phase is Phase.WAITING:
+            try:
+                self.waiting.remove(request)
+            except ValueError:
+                pass
+        else:
+            self.manager.abort_running(request.request_id)
+            self.manager.unpin(request.pinned)
+            request.pinned = []
+            self._execute_swaps(self.manager.drain_ops())
+            if request.slot >= 0:
+                self._slot_req[request.slot] = None
+                self._free_slots.append(request.slot)
+                request.slot = -1
+            request.staged_state = None
+        request.phase = Phase.ABORTED
+        request.finish_time = self._now()
+        self.aborted.append(request)
+
+    def now(self) -> float:
+        """Current engine-clock reading — the time base for ``submit_time``
+        backdating and absolute ``deadline`` values."""
+        return self._now()
 
     def _now(self) -> float:
         if self._start_time is None:
@@ -305,15 +345,32 @@ class ServingEngine:
 
     # ------------------------------------------------------------ main loop
     def run(self, max_steps: int = 10_000) -> ServingReport:
-        """Drive until all submitted requests finish (or step budget)."""
+        """Drive until all submitted requests finish (or step budget).
+
+        Step-budget exhaustion with work still pending is not silent: every
+        in-flight request is drained through :meth:`abort` (releasing its
+        pins, running blocks, and slot — leaked resources would poison any
+        later run on the same engine) and the report carries ``n_unfinished``
+        (submitted but not finished at the cut) and ``n_aborted`` instead of
+        pretending the trace completed. WAITING requests hold no resources
+        and stay queued for a later ``run()``."""
         steps = 0
         while (self.waiting or any(self._slot_req)) and steps < max_steps:
             self.step()
             steps += 1
+        unfinished = (len(self.waiting)
+                      + sum(1 for r in self._slot_req if r is not None))
+        if unfinished:
+            for r in list(self._slot_req):
+                if r is not None:
+                    self.abort(r)
         wall = self._now() - self._epoch
         return summarize(
             self.finished,
             wall,
+            n_aborted=len(self.aborted),
+            n_unfinished=unfinished,
+            n_preempted=self.manager.stats.preemptions,
             kv_hit_rate=self.manager.stats.kv_hit_rate(),
             state_hit_rate=self.manager.stats.state_hit_rate(),
             lora_hit_rate=self.manager.stats.lora_hit_rate(),
@@ -357,22 +414,30 @@ class ServingEngine:
         """One Sarathi-style step: decode slots + budgeted prefill chunks in
         a single row-masked ``extend``.
         Returns (real tokens, budget-planned tokens, budget)."""
-        # admission order, not slot order: under a binding budget the
-        # planner's waterfill favors earlier rows, so the oldest prefill
-        # must come first or slot reuse could starve it
+        # priority tier first, then admission order, not slot order: under a
+        # binding budget the planner's waterfill favors earlier rows, so
+        # within a tier the oldest prefill must come first or slot reuse
+        # could starve it
         prefill_rows = sorted(
             (r for r in self._slot_req
              if r is not None and r.phase is Phase.PREFILLING),
-            key=lambda r: r.admit_time)
+            key=lambda r: (-r.priority, r.admit_time))
         decode_rows = [r for r in self._slot_req
                        if r is not None and r.phase is Phase.DECODE]
         if not prefill_rows and not decode_rows:
             return 0, 0, 0
         budget = self.budget_ctl.budget
+        # interactive fast lane: above-batch-tier rows prefill greedily (up
+        # to the chunk ceiling) before the leftover budget splits evenly, so
+        # an interactive TTFT scales with its own prompt, not the number of
+        # batch prefills in flight
+        fast = frozenset(r.slot for r in prefill_rows
+                         if r.priority > PRIORITY_BATCH)
         plan = plan_step(
             [r.slot for r in decode_rows],
             [(r.slot, len(r.prompt) - r.prefill_pos) for r in prefill_rows],
-            budget=budget, chunk_ceiling=self._prefill_chunk)
+            budget=budget, chunk_ceiling=self._prefill_chunk,
+            fast_slots=fast)
         if not plan.prefill_chunks:
             # pure-decode step: reuse the dedicated S=1 jit instead of
             # padding every decode token to the smallest prefill bucket
@@ -482,61 +547,210 @@ class ServingEngine:
             if r.prefill_pos >= len(r.prompt):
                 r.phase = Phase.DECODE
                 r.generated.append(int(toks[r.slot]))
-                r.first_token_time = self._now()
+                if r.first_token_time is None:
+                    # a resumed preemption victim keeps its TRUE first-token
+                    # time from before the preemption
+                    r.first_token_time = self._now()
                 self._maybe_finish(r)
                 if r.phase is Phase.DECODE:
                     transitioned.append(r)
         return transitioned
 
     # ---------------------------------------------------------------- admit
+    def _admission_rank(self, req: Request, now: float):
+        """Admission sort key: priority tier first (higher = earlier), then
+        least deadline slack — ``deadline − now − estimated TTFT``, the TTFT
+        priced by the cost model's read-only probe (prefix recompute +
+        host-KV/state transfer + adapter cold-start), so a request whose
+        cached prefix makes it cheap to serve jumps ahead of one that must
+        recompute everything — then FCFS on arrival. Requests without a
+        deadline rank after deadline-bearing peers of their tier in plain
+        arrival order, so a legacy trace (no tiers, no deadlines) admits in
+        exactly the old FCFS order."""
+        if req.deadline is None:
+            slack = float("inf")
+        else:
+            est = self.manager.estimate_ttft(
+                req.adapter_id, req.prompt[:-1],
+                shared_prefix_len=req.shared_prefix_len)
+            slack = req.deadline - now - est
+        sub = req.submit_time if req.submit_time is not None else now
+        return (-req.priority, slack, sub, req.request_id)
+
     def _admit_waiting(self) -> None:
-        while self.waiting and self._free_slots:
-            req = self.waiting[0]
+        """Admit waiting requests in cost-ranked order; a request that
+        outranks running work may preempt. One admission (or preemption) per
+        pass — each changes pool state, so the queue re-ranks in between.
+        The head of the *ranked* order gates the queue (no leapfrogging a
+        blocked higher-ranked request with the resources it is waiting on);
+        when it cannot start and no preemption applies, admission stalls
+        until the next step, exactly like the old FCFS head-of-line break."""
+        while self.waiting:
             now = self._now()
-            # match against prompt[:-1]: the last token is always recomputed
-            # so prefill yields logits for it (vLLM semantics). Recurrent
-            # layouts match state-snapshot boundaries instead of per-token KV
-            # — the resumable prefix is the deepest payload snapshot.
-            history = req.prompt[:-1]
-            if self._state_reusable:
-                lk = self.manager.lookup_state(req.adapter_id, history, now)
-                matched = lk.state_tokens
+            head = sorted(self.waiting,
+                          key=lambda r: self._admission_rank(r, now))[0]
+            if self._free_slots and self._try_admit(head, now):
+                continue
+            if self._preempt_for(head, now):
+                continue
+            break
+
+    def _try_admit(self, req: Request, now: float) -> bool:
+        """lookup → admit/pin → allocate → slot → begin prefill; False (with
+        pins rolled back) when HBM or running-block space is exhausted."""
+        # match against prompt[:-1]: the last token is always recomputed
+        # so prefill yields logits for it (vLLM semantics). Recurrent
+        # layouts match state-snapshot boundaries instead of per-token KV
+        # — the resumable prefix is the deepest payload snapshot.
+        history = req.prompt[:-1]
+        if self._state_reusable:
+            lk = self.manager.lookup_state(req.adapter_id, history, now)
+            matched = lk.state_tokens
+        else:
+            lk = self.manager.lookup(
+                req.adapter_id, history, now,
+                shared_prefix_len=req.shared_prefix_len)
+            matched = lk.match.matched_tokens
+        adm = self.manager.admit(lk, now)
+        if adm.queued:
+            self._execute_swaps(self.manager.drain_ops())
+            return False  # HBM saturated; retry next step
+        if self._state_reusable:
+            # recurrent running memory is ONE fixed-size state row, not
+            # per-token KV: reserve a single snapshot's blocks as the
+            # admission throttle. Per-token phantom blocks would evict
+            # real snapshots from the same pool to back bytes that the
+            # architecture never allocates.
+            total_new = self.manager.config.state_blocks * self.cfg.block_size
+        else:
+            total_new = len(req.prompt) - matched + req.max_new_tokens
+        blocks = self.manager.allocate_running(req.request_id, total_new, now)
+        if blocks is None:
+            self.manager.unpin(adm.pinned)
+            self._execute_swaps(self.manager.drain_ops())
+            return False
+        t0 = self._now()
+        # drained ops include demand evictions that freed this query's
+        # blocks — execute them before touching the pool physically
+        self._execute_swaps(self.manager.drain_ops(), req=req)
+        self.waiting.remove(req)
+        req.lookup = lk
+        req.pinned = adm.pinned
+        req.matched_tokens = matched
+        req.hbm_hit_tokens = lk.hbm_hit_tokens
+        req.admit_time = t0
+        req.slot = self._free_slots.popleft()
+        self._slot_req[req.slot] = req
+        self._begin_prefill(req)
+        return True
+
+    def _preempt_for(self, req: Request, now: float) -> bool:
+        """Preempt ONE running victim of strictly lower priority so ``req``
+        can start. Victim choice is deterministic: lowest tier first, then
+        no-deadline before farthest deadline, then youngest admission (least
+        sunk work lost), then request id. Returns False (no preemption) when
+        nothing running ranks strictly below ``req`` — equal-priority work
+        is never preempted, so batch-only traffic keeps the old semantics
+        and the admit/preempt loop terminates (every preemption removes a
+        strictly-lower-priority row)."""
+        victims = [r for r in self._slot_req
+                   if r is not None and r.priority < req.priority
+                   and r.phase in (Phase.PREFILLING, Phase.DECODE)]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda r: (
+            r.priority,
+            -(r.deadline if r.deadline is not None else float("inf")),
+            -(r.admit_time if r.admit_time is not None else 0.0),
+            r.request_id,
+        ))
+        self._preempt(victim, now)
+        return True
+
+    def _preempt(self, victim: Request, now: float) -> None:
+        """Swap a running victim out through the two-tier pool and requeue
+        it for token-identical resume.
+
+        Unlike discard-preemption, the victim's computed work survives: its
+        block-aligned computed KV is scattered into its running blocks and
+        folded into the dependency tree via :meth:`CacheManager.
+        preempt_running` (recurrent layouts fold a state snapshot captured at
+        the current recurrence position instead) — ordinary evictable nodes
+        the performance-driven swapper demotes to host under pressure. The
+        tokens it generated fold into the prompt (kept in ``carried``), so
+        the resume lookup matches the demoted prefix exactly: a decode-phase
+        victim re-prefills just ONE token (the pending decode input) from
+        its swapped KV/state and continues the identical output stream.
+        """
+        slot = victim.slot
+        folded = len(victim.generated)
+        if self._state_reusable:
+            # the resumable boundary is wherever the recurrence actually
+            # sits: full_tokens[:-1] for a decode row (capture it NOW — the
+            # recurrence is destructive), or the already-staged capture
+            # boundary mid-prefill; an uncrossed boundary has no snapshot
+            # and the victim re-prefills from its admission-time match
+            if victim.phase is Phase.DECODE:
+                snap = self._state_flatten_fn(
+                    self.cache, jnp.asarray(slot, jnp.int32))
+                snap_at = len(victim.prompt) + folded - 1
+            elif victim.staged_state is not None:
+                snap, snap_at = victim.staged_state, victim.state_capture_at
             else:
-                lk = self.manager.lookup(
-                    req.adapter_id, history, now,
-                    shared_prefix_len=req.shared_prefix_len)
-                matched = lk.match.matched_tokens
-            adm = self.manager.admit(lk, now)
-            if adm.queued:
+                snap, snap_at = None, -1
+            self.manager.preempt_running(victim.request_id, None, (), now)
+            self.manager.unpin(victim.pinned)
+            if snap is not None:
+                prefix = (victim.prompt + tuple(victim.generated))[:snap_at]
+                node = self.manager.commit_state(
+                    victim.adapter_id, prefix, now)
+                # demand evictions that freed the snapshot's blocks must hit
+                # the data plane BEFORE the store overwrites those rows
                 self._execute_swaps(self.manager.drain_ops())
-                break  # HBM saturated; retry next step
-            if self._state_reusable:
-                # recurrent running memory is ONE fixed-size state row, not
-                # per-token KV: reserve a single snapshot's blocks as the
-                # admission throttle. Per-token phantom blocks would evict
-                # real snapshots from the same pool to back bytes that the
-                # architecture never allocates.
-                total_new = self.manager.config.state_blocks * self.cfg.block_size
+                if node is not None:
+                    self.state_cache.store(node.hbm_blocks, snap)
+            victim.staged_state = None
+        else:
+            m = victim.lookup.match
+            prefix_len = m.matched_tokens
+            if victim.phase is Phase.DECODE:
+                # cache covers full_tokens[:-1]; generated[-1] is the
+                # pending decode input, not yet attended — not committable
+                computed = victim.prompt + tuple(victim.generated[:-1])
             else:
-                total_new = len(req.prompt) - matched + req.max_new_tokens
-            blocks = self.manager.allocate_running(req.request_id, total_new, now)
-            if blocks is None:
-                self.manager.unpin(adm.pinned)
-                self._execute_swaps(self.manager.drain_ops())
-                break
-            t0 = self._now()
-            # drained ops include demand evictions that freed this query's
-            # blocks — execute them before touching the pool physically
-            self._execute_swaps(self.manager.drain_ops(), req=req)
-            self.waiting.popleft()
-            req.lookup = lk
-            req.pinned = adm.pinned
-            req.matched_tokens = matched
-            req.hbm_hit_tokens = lk.hbm_hit_tokens
-            req.admit_time = t0
-            req.slot = self._free_slots.popleft()
-            self._slot_req[req.slot] = req
-            self._begin_prefill(req)
+                computed = victim.prompt[: victim.prefill_pos]
+            bs = self.cfg.block_size
+            cache_tokens = ((len(computed) - prefix_len) // bs) * bs
+            if cache_tokens > 0 and self.manager.config.reuse_history_kv:
+                blocks = self.manager.running_blocks(victim.request_id)
+                keep = blocks[: cache_tokens // bs]
+                k, v = self._read_dense(
+                    slot, prefix_len, prefix_len + cache_tokens)
+                self.kv_pool.scatter(keep, k, v)
+            self.manager.preempt_running(
+                victim.request_id, victim.lookup, computed, now)
+            self.manager.unpin(victim.pinned)
+            self._execute_swaps(self.manager.drain_ops())
+        # requeue: generated tokens fold into the prompt so the resume
+        # lookup matches the demoted KV/state; they live on in `carried`
+        # and max_new_tokens shrinks by the same count
+        if folded:
+            victim.prompt = victim.prompt + tuple(victim.generated)
+            victim.carried.extend(victim.generated)
+            victim.generated = []
+            victim.max_new_tokens -= folded
+        victim.lookup = None
+        victim.pinned = []
+        victim.matched_tokens = 0
+        victim.hbm_hit_tokens = 0
+        victim.prefill_pos = 0
+        victim.state_capture_at = -1
+        victim.phase = Phase.WAITING
+        victim.preempt_count += 1
+        self._slot_req[slot] = None
+        self._free_slots.append(slot)
+        victim.slot = -1
+        self.waiting.append(victim)
 
     def _begin_prefill(self, req: Request) -> None:
         """Gather the matched prefix into the slot's dense cache rows and
@@ -639,7 +853,8 @@ class ServingEngine:
         # libra: ignore[host-sync]
         tok = int(jnp.argmax(logits[slot, -1]))
         req.generated.append(tok)
-        req.first_token_time = self._now()
+        if req.first_token_time is None:
+            req.first_token_time = self._now()
         self._maybe_finish(req)
 
     def _prefill_once(self) -> int:

@@ -35,6 +35,12 @@ class ServingReport:
     # recurrent-state prefix cache (kvcache/state_cache.py): token-weighted
     # snapshot hit rate, symmetric with kv_hit_rate for KV layouts
     state_hit_rate: float = 0.0
+    # request-lifecycle accounting: a run() that exhausts max_steps drains
+    # its leftovers through the abort path and reports them here instead of
+    # silently pretending the trace completed
+    n_aborted: int = 0  # aborted (drained or explicit abort()) requests
+    n_unfinished: int = 0  # still WAITING/in-flight when the report was cut
+    n_preempted: int = 0  # preemption events (a victim can count twice)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -62,6 +68,9 @@ def summarize(
     ema_step_ms: float = 0.0,
     budget_utilization: float = 0.0,
     state_hit_rate: float = 0.0,
+    n_aborted: int = 0,
+    n_unfinished: int = 0,
+    n_preempted: int = 0,
 ) -> ServingReport:
     reqs = [r for r in finished if r.ttft is not None]
     ttfts = [r.ttft for r in reqs]
@@ -88,4 +97,7 @@ def summarize(
         ema_step_ms=ema_step_ms,
         budget_utilization=budget_utilization,
         state_hit_rate=state_hit_rate,
+        n_aborted=n_aborted,
+        n_unfinished=n_unfinished,
+        n_preempted=n_preempted,
     )

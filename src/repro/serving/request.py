@@ -1,4 +1,29 @@
-"""Request model + per-request latency accounting."""
+"""Request model + per-request latency accounting.
+
+Arrival-time semantics: ``submit_time`` is ``None`` until the request is
+handed to the engine, at which point :meth:`ServingEngine.submit` stamps the
+engine clock — UNLESS the caller pre-set it (trace replay with backdated
+arrivals). All queue/TTFT metrics and the deadline-aware admission order are
+measured against this value, so a replayed trace carries its true arrival
+pattern instead of the wall time the replay loop happened to call submit().
+
+SLO tiers: ``priority`` orders admission strictly (higher first — e.g.
+interactive=1 vs batch=0); ``deadline`` is an absolute engine-clock time the
+first token should land by. Within a priority tier the engine admits by
+least deadline slack (deadline − now − estimated TTFT from the cost model),
+then FCFS. A higher-priority request that cannot be admitted may PREEMPT a
+strictly-lower-priority running victim: the victim's computed KV (or
+recurrent-state snapshot) is folded into the two-tier cache pool — demoted
+to host by the swapper under pressure, not discarded — and the victim
+requeues. On resume it matches its own swapped prefix and continues
+token-identically; generated tokens survive in ``carried`` and
+``output_tokens`` presents the full carried+generated stream.
+
+Abort semantics: :meth:`ServingEngine.abort` (and the ``run()`` drain on
+step exhaustion) moves a request to ``Phase.ABORTED`` after releasing every
+resource it held — pins, running blocks, slot, staged state. An aborted
+request keeps whatever tokens it produced but is never counted as finished.
+"""
 
 from __future__ import annotations
 
@@ -13,7 +38,12 @@ class Phase(enum.Enum):
     PREFILLING = "prefilling"  # chunked batch prefill in flight
     DECODE = "decode"
     FINISHED = "finished"
-    ABORTED = "aborted"
+    ABORTED = "aborted"  # released by the engine's abort/drain path
+
+
+# SLO tier conventions (any int works; higher = more latency-sensitive)
+PRIORITY_BATCH = 0
+PRIORITY_INTERACTIVE = 1
 
 
 @dataclasses.dataclass
@@ -22,7 +52,14 @@ class Request:
     adapter_id: str
     prompt: tuple[int, ...]
     max_new_tokens: int
-    submit_time: float = 0.0
+    # None until submit(); pre-set by trace replay to carry true arrivals
+    # (submit() honors a caller-provided value instead of clobbering it)
+    submit_time: Optional[float] = None
+    # SLO tier: admission is ordered by (priority desc, deadline slack asc,
+    # submit_time); preemption only ever evicts a STRICTLY lower priority
+    priority: int = PRIORITY_BATCH
+    # absolute engine-clock first-token deadline (None = no deadline)
+    deadline: Optional[float] = None
     # filled during serving
     phase: Phase = Phase.WAITING
     generated: list[int] = dataclasses.field(default_factory=list)
@@ -54,10 +91,16 @@ class Request:
     # captured flat state staged until commit folds it into the pool
     state_capture_at: int = -1
     staged_state: object = None
+    # preemption bookkeeping: tokens generated before a preemption are folded
+    # into the (growing) prompt so the resume lookup matches the victim's own
+    # committed KV/state — they live on in ``carried`` and the resume decode
+    # continues token-identically from where preemption cut it off
+    carried: list[int] = dataclasses.field(default_factory=list)
+    preempt_count: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
-        if self.first_token_time is None:
+        if self.first_token_time is None or self.submit_time is None:
             return None
         return self.first_token_time - self.submit_time
 
@@ -65,15 +108,23 @@ class Request:
     def tpot(self) -> Optional[float]:
         if self.finish_time is None or self.first_token_time is None:
             return None
-        n = max(1, len(self.generated) - 1)
+        n = max(1, len(self.carried) + len(self.generated) - 1)
         return (self.finish_time - self.first_token_time) / n
 
     @property
     def queue_time(self) -> Optional[float]:
-        if self.admit_time is None:
+        if self.admit_time is None or self.submit_time is None:
             return None
         return self.admit_time - self.submit_time
 
     @property
     def full_tokens(self) -> tuple[int, ...]:
         return self.prompt + tuple(self.generated)
+
+    @property
+    def output_tokens(self) -> tuple[int, ...]:
+        """The complete generated stream: tokens produced before any
+        preemption (folded into the prompt, kept in ``carried``) plus the
+        current ``generated`` tail. Equals ``tuple(generated)`` for a request
+        that was never preempted."""
+        return tuple(self.carried) + tuple(self.generated)

@@ -49,6 +49,7 @@ def plan_step(
     *,
     budget: int,
     chunk_ceiling: int,
+    fast_slots: frozenset[int] = frozenset(),
 ) -> StepPlan:
     """Pack one mixed step: decode slots first (1 token each, never dropped),
     then prefill rows — taken in the caller's order; the engine passes them
@@ -63,6 +64,13 @@ def plan_step(
     bucketed subsystem. The budget still bounds step latency: it caps the
     total real tokens and thereby the bucket the batch pads to.
 
+    Interactive fast lane: rows whose slot is in ``fast_slots`` (the engine
+    passes its interactive-tier requests) are served FIRST and greedily — up
+    to ``chunk_ceiling`` each, in row order — before the remaining budget is
+    split evenly over the slow rows. Their TTFT then scales with their own
+    prompt length, not with however many batch-tier prefills happen to be in
+    flight. With ``fast_slots`` empty the plan is exactly the legacy one.
+
     Progress guarantee: if any prefill row is pending, the first one receives
     at least 1 token even when decode alone exhausts the budget — a saturated
     decode batch must not livelock admission (TTFT would diverge).
@@ -74,25 +82,35 @@ def plan_step(
     chunks: dict[int, int] = {}
     if rows:
         remaining = max(budget - len(decode_slots), 0)
-        share = min(chunk_ceiling, remaining // len(rows))
-        if share == 0:
-            # fewer budget tokens than rows: 1 token each while they last
-            # (never zero rows — the progress guarantee)
-            for slot, _ in rows[:max(1, remaining)]:
-                chunks[slot] = 1
-        else:
-            for slot, left in rows:
-                take = min(left, share)
+        fast = [(s, l) for s, l in rows if s in fast_slots]
+        slow = [(s, l) for s, l in rows if s not in fast_slots]
+        for slot, left in fast:  # fast lane: greedy fill, row order
+            take = min(left, chunk_ceiling, remaining)
+            if take > 0:
                 chunks[slot] = take
                 remaining -= take
-            for slot, left in rows:  # waterfill the leftover in row order
-                if remaining <= 0:
-                    break
-                extra = min(left, chunk_ceiling) - chunks[slot]
-                if extra > 0:
-                    extra = min(extra, remaining)
-                    chunks[slot] += extra
-                    remaining -= extra
+        if slow:
+            share = min(chunk_ceiling, remaining // len(slow))
+            if share == 0:
+                # fewer budget tokens than rows: 1 token each while they last
+                for slot, _ in slow[:remaining]:
+                    chunks[slot] = 1
+            else:
+                for slot, left in slow:
+                    take = min(left, share)
+                    chunks[slot] = take
+                    remaining -= take
+                for slot, left in slow:  # waterfill leftover in row order
+                    if remaining <= 0:
+                        break
+                    extra = min(left, chunk_ceiling) - chunks[slot]
+                    if extra > 0:
+                        extra = min(extra, remaining)
+                        chunks[slot] += extra
+                        remaining -= extra
+        if not chunks:
+            # never zero rows — the progress guarantee
+            chunks[rows[0][0]] = 1
     return StepPlan(decode_slots=decode_slots, prefill_chunks=chunks,
                     budget=budget)
 

@@ -75,6 +75,19 @@ class SimRequest:
     rid: str = ""
     # mixed-mode chunked prefill progress (suffix tokens already computed)
     prefill_done: int = 0
+    # swap-preserving preemption: output tokens produced before a preemption
+    # fold into the effective prompt (mirrors the engine's Request.carried),
+    # so the resume lookup matches the victim's own demoted KV/state and
+    # decode continues from token carried+1 — never recomputed divergently
+    carried: int = 0
+    preempt_count: int = 0
+
+    @property
+    def eff_prompt(self) -> tuple[int, ...]:
+        """Prompt plus carried output tokens — what a resume prefills
+        against (== query.prompt for a never-preempted request)."""
+        q = self.query
+        return q.full[: len(q.prompt) + self.carried]
 
     @property
     def ttft(self) -> Optional[float]:
@@ -219,6 +232,49 @@ class ServingSimulator:
                     self._schedule_transfer(op.nbytes, now, inbound=False),
                 )
 
+    # --------------------------------------------------------- SLO policy
+    def _admission_rank(self, r: SimRequest, now: float):
+        """Admission sort key (mirrors ``ServingEngine._admission_rank``):
+        priority tier desc, then least deadline slack — the cost model's
+        read-only TTFT estimate prices prefix recompute, host transfers,
+        and adapter cold-start — then FCFS arrival, then rid."""
+        q = r.query
+        if q.deadline is None:
+            slack = float("inf")
+        else:
+            est = self.manager.estimate_ttft(
+                q.lora_id, r.eff_prompt[:-1],
+                shared_prefix_len=q.shared_prefix_len)
+            slack = q.deadline - now - est
+        return (-q.priority, slack, q.arrival, r.rid)
+
+    def _preempt(self, victim: SimRequest, now: float) -> None:
+        """Swap-preserving preemption (mirrors ``ServingEngine._preempt``):
+        the victim's computed prefix — everything up to its pending decode
+        token — folds into the dependency tree (KV) or snapshots at that
+        boundary (recurrent state), where the swapper demotes it to host
+        under pressure instead of discarding it. Its produced tokens fold
+        into the effective prompt (``carried``), so the resume lookup
+        matches the demoted work and decode continues token-identically;
+        the victim keeps its true first-token time."""
+        q = victim.query
+        boundary = len(q.prompt) + victim.tokens_done - 1
+        if self._state_mode:
+            self.manager.preempt_running(victim.rid, None, (), now)
+            self.manager.commit_state(q.lora_id, q.full[:boundary], now)
+        else:
+            self.manager.preempt_running(
+                victim.rid, victim.lookup, q.full[:boundary], now)
+        self.manager.unpin(victim.pinned)
+        self._execute_ops(self.manager.drain_ops(), now)
+        victim.carried = victim.tokens_done
+        victim.lookup = None
+        victim.pinned = []
+        victim.matched_tokens = 0
+        victim.hbm_hit_tokens = 0
+        victim.prefill_done = 0
+        victim.preempt_count += 1
+
     # ------------------------------------------------------------ main loop
     def run(self) -> SimResult:
         cfg = self.cfg
@@ -274,37 +330,62 @@ class ServingSimulator:
                     )
                 self.swapper.tick(now)
                 self._execute_ops(self.manager.drain_ops(), now)
-            # admit
-            while waiting and len(running) + len(pending) < cfg.max_batch:
-                r = waiting[0]
+            # admit — cost-ranked (priority tier, then least deadline slack,
+            # then FCFS); a blocked higher-tier head may preempt a strictly
+            # lower-priority running victim instead of waiting behind it
+            while waiting:
+                r = sorted(waiting,
+                           key=lambda w: self._admission_rank(w, now))[0]
                 q = r.query
-                if self._state_mode:
-                    lk = self.manager.lookup_state(q.lora_id, q.prompt[:-1], now)
-                    matched = lk.state_tokens
-                else:
-                    lk = self.manager.lookup(
-                        q.lora_id, q.prompt[:-1], now,
-                        shared_prefix_len=q.shared_prefix_len)
-                    matched = lk.match.matched_tokens
-                adm = self.manager.admit(lk, now)
-                if adm.queued:
-                    self._execute_ops(self.manager.drain_ops(), now)
-                    break
-                # lazy allocation (vLLM semantics): prefill blocks now, decode
-                # blocks one iteration at a time (stall when HBM is full).
-                # Recurrent state is O(1) per request: reserve one snapshot's
-                # blocks instead of phantom per-token KV.
-                if self._state_mode:
-                    need = (self.manager.config.state_blocks
-                            * self.cfg.block_size)
-                else:
-                    need = len(q.prompt) - matched
-                blocks = self.manager.allocate_running(r.rid, need, now)
-                if blocks is None:
-                    self.manager.unpin(adm.pinned)
-                    self._execute_ops(self.manager.drain_ops(), now)
-                    break
-                waiting.popleft()
+                lk = adm = None
+                blocked = len(running) + len(pending) >= cfg.max_batch
+                if not blocked:
+                    prompt = r.eff_prompt
+                    if self._state_mode:
+                        lk = self.manager.lookup_state(
+                            q.lora_id, prompt[:-1], now)
+                        matched = lk.state_tokens
+                    else:
+                        lk = self.manager.lookup(
+                            q.lora_id, prompt[:-1], now,
+                            shared_prefix_len=q.shared_prefix_len)
+                        matched = lk.match.matched_tokens
+                    adm = self.manager.admit(lk, now)
+                    if adm.queued:
+                        self._execute_ops(self.manager.drain_ops(), now)
+                        blocked = True
+                if not blocked:
+                    # lazy allocation (vLLM semantics): prefill blocks now,
+                    # decode blocks one iteration at a time (stall when HBM
+                    # is full). Recurrent state is O(1) per request: reserve
+                    # one snapshot's blocks instead of phantom per-token KV.
+                    if self._state_mode:
+                        need = (self.manager.config.state_blocks
+                                * self.cfg.block_size)
+                    else:
+                        need = len(prompt) - matched
+                    blocks = self.manager.allocate_running(r.rid, need, now)
+                    if blocks is None:
+                        self.manager.unpin(adm.pinned)
+                        self._execute_ops(self.manager.drain_ops(), now)
+                        blocked = True
+                if blocked:
+                    victims = [v for v in running
+                               if v.query.priority < q.priority]
+                    if not victims:
+                        break
+                    victim = min(victims, key=lambda v: (
+                        v.query.priority,
+                        -(v.query.deadline if v.query.deadline is not None
+                          else float("inf")),
+                        -(v.admit_time if v.admit_time is not None else 0.0),
+                        v.rid,
+                    ))
+                    running.remove(victim)
+                    self._preempt(victim, now)
+                    waiting.appendleft(victim)
+                    continue
+                waiting.remove(r)
                 r.lookup = lk
                 r.pinned = adm.pinned
                 r.matched_tokens = matched
@@ -357,11 +438,14 @@ class ServingSimulator:
                     # advance chunk-by-chunk with the remainder, so one long
                     # prompt cannot blow up this iteration's duration
                     budget = max(cfg.step_token_budget - len(running), 1)
+                    # interactive fast lane (mirrors plan_step fast_slots):
+                    # higher tiers drain the budget first, FCFS within a tier
                     for r in sorted(ready_prefills,
-                                    key=lambda r: r.query.arrival):
+                                    key=lambda r: (-r.query.priority,
+                                                   r.query.arrival, r.rid)):
                         if budget <= 0:
                             break
-                        left = (len(r.query.prompt) - r.matched_tokens
+                        left = (len(r.eff_prompt) - r.matched_tokens
                                 - r.prefill_done)
                         take = min(left, budget)
                         t_iter += self.hw.prefill_time(
@@ -370,14 +454,13 @@ class ServingSimulator:
                         budget -= take
                         prefill_tokens += take
                         if (r.prefill_done
-                                >= len(r.query.prompt) - r.matched_tokens):
+                                >= len(r.eff_prompt) - r.matched_tokens):
                             entered.append(r)
                             pending.remove(r)
                 else:
                     for r in ready_prefills:
                         pending.remove(r)
-                        q = r.query
-                        new = len(q.prompt) - r.matched_tokens
+                        new = len(r.eff_prompt) - r.matched_tokens
                         t_iter += self.hw.prefill_time(new, r.matched_tokens)
                         prefill_tokens += new
                         entered.append(r)
@@ -388,9 +471,12 @@ class ServingSimulator:
                 last_iter_tokens = len(running) + prefill_tokens
                 now += max(t_iter, 1e-6)
                 for r in entered:
-                    r.first_token_time = now
-                    r.tokens_done = 1
-                    recent_ttfts.append((now, r.ttft))
+                    if r.first_token_time is None:
+                        # a resumed preemption victim keeps its TRUE first-
+                        # token time from before the preemption
+                        r.first_token_time = now
+                        recent_ttfts.append((now, r.ttft))
+                    r.tokens_done = r.carried + 1
                     running.append(r)
                 still = []
                 any_progress = bool(entered) or prefill_tokens > 0
@@ -413,11 +499,13 @@ class ServingSimulator:
                         r.finish_time = now
                         if self._state_mode:
                             # fold a snapshot at the len(prompt)-1 boundary
-                            # (mirrors the engine's capture point) instead of
-                            # per-token KV; running blocks just release
+                            # (mirrors the engine's capture point; for a
+                            # resumed victim the boundary is its effective
+                            # prompt's) instead of per-token KV; running
+                            # blocks just release
                             self.manager.abort_running(r.rid)
                             self.manager.commit_state(
-                                r.query.lora_id, r.query.prompt[:-1], now)
+                                r.query.lora_id, r.eff_prompt[:-1], now)
                         else:
                             self.manager.commit(r.rid, r.lookup, r.query.full, now)
                         self.manager.unpin(r.pinned)
@@ -428,15 +516,16 @@ class ServingSimulator:
                 self._execute_ops(self.manager.drain_ops(), now)
                 if stalled and not any_progress:
                     # every running request is blocked on HBM: preempt the
-                    # youngest (vLLM-style recompute preemption) to unblock
-                    # rid tiebreak: simultaneous arrivals (trace bursts) must
-                    # preempt deterministically, not by list-build order
-                    victim = max(stalled, key=lambda r: (r.query.arrival, r.rid))
+                    # lowest tier's youngest to unblock (rid tiebreak:
+                    # simultaneous arrivals in trace bursts must preempt
+                    # deterministically, not by list-build order) — swap-
+                    # preserving, not vLLM recompute-preemption: its computed
+                    # prefix demotes through the two-tier pool and it resumes
+                    # token-identically with its first-token time intact
+                    victim = max(stalled, key=lambda r: (
+                        -r.query.priority, r.query.arrival, r.rid))
                     stalled.remove(victim)
-                    self.manager.abort_running(victim.rid)
-                    self.manager.unpin(victim.pinned)
-                    victim.tokens_done = 0
-                    victim.first_token_time = None
+                    self._preempt(victim, now)
                     waiting.appendleft(victim)
                 running = still + stalled
             else:

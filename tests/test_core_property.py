@@ -95,6 +95,10 @@ op_st = st.one_of(
 # running blocks) across other queries' lifecycles, then commit or abort in
 # arbitrary order, with swapper sweeps in between. Nothing before this
 # fuzzed partially-completed queries racing the eviction machinery.
+# The preempt/resume pair folds an open query's computed prefix back into
+# the tree (preempt_running) and later re-admits it under the SAME query id
+# (the engine's swap-out-and-requeue path) — the sanitizer's
+# preempted-residue family must hold across every interleaving.
 mixed_op_st = st.one_of(
     # begin carries a declared shared-prefix length: 0 = plain per-adapter
     # query, >0 = the leading span commits to the cross-adapter trunk, so
@@ -104,6 +108,9 @@ mixed_op_st = st.one_of(
     st.tuples(st.just("grow"), st.integers(0, 7), st.integers(1, 8)),
     st.tuples(st.just("commit"), st.integers(0, 7)),
     st.tuples(st.just("abort"), st.integers(0, 7)),
+    # discard=True exercises the no-reusable-prefix branch (lookup=None)
+    st.tuples(st.just("preempt"), st.integers(0, 7), st.booleans()),
+    st.tuples(st.just("resume"), st.integers(0, 7)),
     st.tuples(st.just("tick"), st.floats(0.1, 5.0), st.floats(0.0, 24.0)),
 )
 
@@ -138,6 +145,7 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
     now = 1.0
     qid = 0
     open_queries: list[dict] = []  # admitted, pinned, not yet resolved
+    preempted: list[dict] = []  # swapped out, holding NOTHING, resumable
     for op in ops:
         now += 0.05
         if op[0] == "begin":
@@ -156,7 +164,8 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
                     mgr.unpin(adm.pinned)
                 else:
                     open_queries.append({
-                        "id": name, "lookup": lk, "pinned": adm.pinned,
+                        "id": name, "lid": lid, "lookup": lk,
+                        "pinned": adm.pinned,
                         "toks": tuple(toks), "new": new_toks,
                     })
         elif op[0] == "grow" and open_queries:
@@ -174,6 +183,44 @@ def test_manager_invariants_with_open_queries(ops, hbm_blocks):
             q = open_queries.pop(op[1] % len(open_queries))
             mgr.abort_running(q["id"])
             mgr.unpin(q["pinned"])
+        elif op[0] == "preempt" and open_queries:
+            q = open_queries.pop(op[1] % len(open_queries))
+            # the engine folds the computed prefix (prompt + generated so
+            # far) back into the tree; discard=True models the
+            # nothing-reusable branch (recurrent layout with an uncrossed
+            # capture boundary → lookup=None → plain abort + mark)
+            done = q["new"] // 2
+            computed = q["toks"] + tuple(
+                range(3000 + qid * 100, 3000 + qid * 100 + done))
+            if op[2]:
+                mgr.preempt_running(q["id"], None, (), now)
+            else:
+                mgr.preempt_running(q["id"], q["lookup"], computed, now)
+            mgr.unpin(q["pinned"])
+            preempted.append({"id": q["id"], "lid": q["lid"],
+                              "toks": computed})
+        elif op[0] == "resume" and preempted:
+            # re-admit under the SAME query id: allocate_running must clear
+            # the preempted-residue mark, and the lookup should find the
+            # victim's own folded prefix
+            p = preempted.pop(op[1] % len(preempted))
+            lk = mgr.lookup(p["lid"], p["toks"], now)
+            adm = mgr.admit(lk, now)
+            if adm.queued:
+                mgr.drain_ops()
+                preempted.append(p)  # retry in a later op
+            else:
+                need = len(p["toks"]) - lk.match.matched_tokens + 2
+                blocks = mgr.allocate_running(p["id"], need, now)
+                if blocks is None:
+                    mgr.abort_running(p["id"])
+                    mgr.unpin(adm.pinned)
+                else:
+                    open_queries.append({
+                        "id": p["id"], "lid": p["lid"], "lookup": lk,
+                        "pinned": adm.pinned,
+                        "toks": p["toks"], "new": 2,
+                    })
         elif op[0] == "tick":
             sw.observe_batch_size(op[2])  # unified token-count signal
             sw.tick(now + op[1])

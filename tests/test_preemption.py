@@ -1,0 +1,252 @@
+"""SLO-tiered admission, cost-model preemption, and request lifecycle.
+
+The key correctness property: a preempted-then-resumed request must emit the
+SAME output stream as an unpreempted run. Preemption folds the victim's
+computed KV (or recurrent-state snapshot) into the two-tier pool and its
+generated tokens into the prompt, so the resume lookup matches the demoted
+prefix and decode continues token-identically — across GQA, MLA, and
+recurrent-STATE layouts under both mixed and alternate schedules.
+
+Plus the lifecycle bugfixes this area shipped with: ``submit()`` honoring a
+caller pre-set ``submit_time`` (trace replay backdating), and ``run()``
+draining leftover in-flight requests through the abort path on step
+exhaustion instead of leaking their pins/blocks/slots.
+"""
+
+import itertools
+
+import jax
+import pytest
+
+from repro import configs
+from repro.serving import EngineConfig, Phase, Request, ServingEngine
+from repro.serving.request import PRIORITY_INTERACTIVE
+
+_ids = itertools.count()
+
+# GQA, MLA, recurrent STATE
+ARCHS = ["qwen3-0.6b", "deepseek-v2-lite-16b", "rwkv6-1.6b"]
+SCHEDULES = ["mixed", "alternate"]
+
+
+def make_engine(arch="qwen3-0.6b", schedule="mixed", slots=1, hbm=8 << 20):
+    cfg = configs.reduced(configs.get(arch))
+    ecfg = EngineConfig(
+        hbm_bytes=hbm, host_bytes=32 << 20, block_size=4,
+        max_batch_slots=slots, max_seq_len=96, prefill_mode="bucketed",
+        prefill_chunk=8, prefill_min_bucket=4,
+        schedule_mode=schedule, step_token_budget=24,
+    )
+    eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(7))
+    for i in range(2):
+        eng.register_adapter(f"lora-{i}")
+    return eng
+
+
+def req(adapter, prompt, n=4, **kw):
+    return Request(f"pp{next(_ids)}", adapter, tuple(prompt),
+                   max_new_tokens=n, **kw)
+
+
+def _step_until(eng, r, phase, limit=64):
+    for _ in range(limit):
+        if r.phase is phase:
+            return
+        eng.step()
+    raise AssertionError(f"{r.request_id} never reached {phase}")
+
+
+# ------------------------------------------------- differential: preempt
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_preempt_resume_token_identical(arch, schedule):
+    """Decode-phase preemption: an interactive arrival on a full engine
+    evicts the batch-tier victim mid-decode; the victim resumes from its
+    swapped KV/state and finishes with an identical output stream."""
+    eng = make_engine(arch, schedule)
+    victim = req("lora-0", range(10, 26), n=8)
+    eng.submit(victim)
+    _step_until(eng, victim, Phase.DECODE)
+    eng.step()  # generate at least one token to carry across the preempt
+    assert victim.generated
+    intr = req("lora-1", range(40, 48), n=2,
+               priority=PRIORITY_INTERACTIVE, deadline=eng.now() + 0.01)
+    eng.submit(intr)
+    report = eng.run()
+    assert victim.preempt_count >= 1
+    assert report.n_preempted >= 1
+    assert victim.phase is Phase.FINISHED
+    assert intr.phase is Phase.FINISHED
+    # the interactive actually jumped the queue
+    assert intr.finish_time <= victim.finish_time
+    assert len(victim.output_tokens) == 8
+
+    ref_eng = make_engine(arch, schedule)
+    ref = req("lora-0", range(10, 26), n=8)
+    ref_eng.submit(ref)
+    ref_eng.run()
+    assert victim.output_tokens == tuple(ref.generated), (
+        "preempt/resume changed generation"
+    )
+    eng.manager.check_invariants()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "rwkv6-1.6b"])
+def test_preempt_mid_prefill_token_identical(arch):
+    """Prefill-phase preemption: the victim loses its un-aligned tail (and,
+    for recurrent layouts with no crossed capture boundary, the whole
+    partial prefill) but must still resume to an identical stream."""
+    eng = make_engine(arch, "mixed")
+    victim = req("lora-0", range(100, 132), n=4)  # 32 tokens, 4 chunks
+    eng.submit(victim)
+    _step_until(eng, victim, Phase.PREFILLING)
+    assert 0 < victim.prefill_pos < len(victim.prompt)
+    intr = req("lora-1", range(40, 48), n=2,
+               priority=PRIORITY_INTERACTIVE, deadline=eng.now() + 0.01)
+    eng.submit(intr)
+    eng.run()
+    assert victim.preempt_count >= 1
+    assert victim.phase is Phase.FINISHED
+
+    ref_eng = make_engine(arch, "mixed")
+    ref = req("lora-0", range(100, 132), n=4)
+    ref_eng.submit(ref)
+    ref_eng.run()
+    assert victim.output_tokens == tuple(ref.generated)
+    eng.manager.check_invariants()
+
+
+def test_double_preempt_resume_token_identical():
+    """A victim preempted twice (two interactive waves) still resumes to an
+    identical stream, with every wave's tokens accumulated in carried."""
+    eng = make_engine()
+    victim = req("lora-0", range(10, 26), n=8)
+    eng.submit(victim)
+    for wave in range(2):
+        _step_until(eng, victim, Phase.DECODE)
+        eng.step()
+        intr = req("lora-1", range(40 + 10 * wave, 48 + 10 * wave), n=2,
+                   priority=PRIORITY_INTERACTIVE, deadline=eng.now() + 0.01)
+        eng.submit(intr)
+        _step_until(eng, intr, Phase.FINISHED)
+    report = eng.run()
+    assert victim.preempt_count == 2
+    assert report.n_preempted == 2
+    assert victim.phase is Phase.FINISHED
+
+    ref_eng = make_engine()
+    ref = req("lora-0", range(10, 26), n=8)
+    ref_eng.submit(ref)
+    ref_eng.run()
+    assert victim.output_tokens == tuple(ref.generated)
+    eng.manager.check_invariants()
+
+
+def test_preemption_is_priority_strict():
+    """Equal-priority arrivals never preempt: the engine falls back to
+    waiting for a slot, so a same-tier victim keeps running."""
+    eng = make_engine()
+    first = req("lora-0", range(10, 22), n=6)
+    eng.submit(first)
+    _step_until(eng, first, Phase.DECODE)
+    peer = req("lora-1", range(40, 48), n=2)  # same (batch) tier
+    eng.submit(peer)
+    report = eng.run()
+    assert first.preempt_count == 0
+    assert report.n_preempted == 0
+    assert first.finish_time <= peer.first_token_time
+
+
+def test_interactive_admitted_ahead_of_earlier_batch():
+    """A free-slot engine with a queued backlog admits by tier first: the
+    later-submitted interactive request overtakes the earlier batch one."""
+    eng = make_engine(slots=1)
+    running = req("lora-0", range(10, 22), n=6)
+    queued_batch = req("lora-0", range(60, 72), n=2)
+    eng.submit(running)
+    _step_until(eng, running, Phase.DECODE)
+    eng.submit(queued_batch)
+    intr = req("lora-1", range(40, 48), n=2,
+               priority=PRIORITY_INTERACTIVE, deadline=eng.now() + 10.0)
+    eng.submit(intr)
+    eng.run()
+    assert intr.admit_time <= queued_batch.admit_time
+    assert intr.first_token_time <= queued_batch.first_token_time
+
+
+# ------------------------------------------------- lifecycle bugfixes
+
+
+def test_submit_honors_preset_arrival():
+    eng = make_engine()
+    backdated = req("lora-0", range(10, 18), n=2, submit_time=123.456)
+    eng.submit(backdated)
+    assert backdated.submit_time == 123.456
+    fresh = req("lora-0", range(20, 28), n=2)
+    eng.submit(fresh)
+    assert fresh.submit_time is not None
+    assert fresh.submit_time != 123.456
+
+
+def test_run_exhaustion_drains_and_reports():
+    """Step-budget exhaustion must release every in-flight resource through
+    the abort path and surface the damage in the report — WAITING requests
+    hold nothing and stay queued for a later run()."""
+    eng = make_engine(slots=2)
+    rs = [req("lora-0", range(10 + 16 * i, 26 + 16 * i), n=8)
+          for i in range(4)]
+    for r in rs:
+        eng.submit(r)
+    report = eng.run(max_steps=2)
+    assert report.n_finished == 0
+    assert report.n_unfinished == 4
+    assert report.n_aborted == 2  # the two slot-resident requests drained
+    for r in eng.aborted:
+        assert r.phase is Phase.ABORTED
+        assert r.slot == -1 and not r.pinned
+        assert r.finish_time is not None
+    assert len(eng.waiting) == 2  # untouched, still queued
+    eng.manager.check_invariants()
+    # the engine is still serviceable: the queued leftovers finish cleanly
+    report2 = eng.run()
+    assert report2.n_finished == 2
+    assert report2.n_unfinished == 0
+    eng.manager.check_invariants()
+
+
+def test_abort_waiting_and_running():
+    eng = make_engine(slots=2)
+    running = req("lora-0", range(10, 22), n=6)
+    waiting = req("lora-1", range(40, 52), n=6)
+    eng.submit(running)
+    _step_until(eng, running, Phase.DECODE)
+    eng.submit(waiting)
+    eng.abort(waiting)  # never admitted: just leaves the queue
+    assert waiting.phase is Phase.ABORTED
+    assert not eng.waiting
+    eng.abort(running)  # in-flight: blocks + slot + pins released
+    assert running.phase is Phase.ABORTED
+    assert running.slot == -1
+    report = eng.run()
+    assert report.n_finished == 0
+    assert report.n_aborted == 2
+    eng.manager.check_invariants()
+    # aborting twice is a no-op
+    eng.abort(running)
+    assert len(eng.aborted) == 2
+
+
+def test_legacy_traces_admit_fcfs():
+    """No tiers, no deadlines: the ranked admission must reduce to exact
+    FCFS submit order."""
+    eng = make_engine(slots=1)
+    rs = [req("lora-0", range(10 + 8 * i, 18 + 8 * i), n=2)
+          for i in range(4)]
+    for r in rs:
+        eng.submit(r)
+    eng.run()
+    admits = [r.admit_time for r in rs]
+    assert admits == sorted(admits)
+    assert all(r.phase is Phase.FINISHED for r in rs)
