@@ -19,6 +19,33 @@ HBM_BW = 819e9  # per chip
 ICI_BW = 50e9  # per link
 
 
+def kernel_roofline(flops: float, hbm_bytes: float,
+                    measured_us: float | None = None) -> dict:
+    """Single-chip roofline terms for one kernel invocation.
+
+    ``flops``/``hbm_bytes`` come from ``repro.kernels.counting`` — analytic
+    replay of the trimmed grids, not a profiler. ``ceiling_fraction`` is the
+    best MXU utilization the counted traffic admits (t_comp / bound ≤ 1);
+    ``achieved_fraction`` (when a measured TPU time is supplied) is
+    bound / measured — how close the run came to its own roofline. CI pins
+    floors on these for the kernel-regression job (TPU-only for achieved;
+    the counted ceiling is hardware-independent). See README.md §Kernels.
+    """
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm_bytes / HBM_BW
+    bound = max(t_comp, t_mem, 1e-15)
+    out = {
+        "t_compute": t_comp,
+        "t_memory": t_mem,
+        "bound_us": bound * 1e6,
+        "dominant": "compute" if t_comp >= t_mem else "memory",
+        "ceiling_fraction": t_comp / bound,
+    }
+    if measured_us is not None and measured_us > 0:
+        out["achieved_fraction"] = min(1.0, bound * 1e6 / measured_us)
+    return out
+
+
 def roofline_terms(rec: dict) -> dict:
     chips = rec["num_devices"]
     t_comp = rec["flops"] / (chips * PEAK_FLOPS)

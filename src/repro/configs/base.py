@@ -91,6 +91,11 @@ class ModelConfig:
     frontend: Optional[str] = None  # None | "audio" | "vision"
     # True if attention is sub-quadratic / state-based (long_500k eligible)
     subquadratic: bool = False
+    # "jnp" (einsum correctness pin) or "pallas" (the kernels in
+    # repro.kernels drive gqa_cached / gqa_full / LoRA projections; interpret
+    # mode is auto-detected on CPU). The serving engine overrides this from
+    # EngineConfig.kernel_backend; see README.md §Kernels.
+    kernel_backend: str = "jnp"
 
     @property
     def resolved_head_dim(self) -> int:

@@ -1,14 +1,41 @@
 """Pallas TPU kernels for the serving hot-spots (validated in interpret mode
 on CPU, compiled via Mosaic on TPU):
 
-* ``sgmv``            — multi-LoRA batched matmul (adapter gather in the
-                        BlockSpec index map; Punica/S-LoRA's SGMV, TPU-native)
-* ``paged_attention`` — decode attention over the paged KV pool (block-table
-                        indirection via scalar prefetch)
-* ``flash_prefill``   — causal flash attention for prefill
+* ``sgmv``                 — multi-LoRA batched matmul (adapter gather in the
+                             BlockSpec index map; Punica/S-LoRA's SGMV)
+* ``fused_sgmv``           — base projection + LoRA delta in one kernel: one
+                             pass over each activation tile
+* ``paged_attention``      — decode attention over the paged KV pool, page
+                             index map length-trimmed via scalar prefetch
+* ``flash_prefill``        — causal flash attention on a block-skip
+                             (triangular flattened) grid
+* ``flash_prefill_ragged`` — same, with per-row true lengths trimming the
+                             padded bucket tail
+* ``ragged_extend``        — suffix-chunk attention against the dense KV
+                             cache (the engine's one-true-step kernel)
+
+Design notes and the counted-bytes methodology live in README.md §Kernels;
+``counting`` holds the analytic DMA/FLOP counters the regression harness
+asserts against.
 """
 
-from . import ref
-from .ops import flash_prefill, paged_attention, sgmv
+from . import counting, ref
+from .ops import (
+    flash_prefill,
+    flash_prefill_ragged,
+    fused_sgmv,
+    paged_attention,
+    ragged_extend,
+    sgmv,
+)
 
-__all__ = ["flash_prefill", "paged_attention", "sgmv", "ref"]
+__all__ = [
+    "flash_prefill",
+    "flash_prefill_ragged",
+    "fused_sgmv",
+    "paged_attention",
+    "ragged_extend",
+    "sgmv",
+    "ref",
+    "counting",
+]

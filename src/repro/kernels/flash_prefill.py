@@ -1,12 +1,25 @@
 """Causal flash attention (prefill) as a Pallas TPU kernel.
 
-Standard two-level tiling: grid (B, H, q_blocks, kv_blocks); the kv-block
-dimension is innermost/sequential, carrying flash running statistics in VMEM
-scratch. GQA is handled in the index map (kv head = q head // G) so KV tiles
-are fetched once per group, not per q head. Blocks above the causal diagonal
-contribute nothing and are masked (TPU grids cannot be ragged; the masked
-blocks are the price of a static grid — see EXPERIMENTS.md §Perf for the
-block-skip optimization).
+Block-skip design (README.md §Kernels): instead of a rectangular
+``(q_blocks, kv_blocks)`` grid whose above-diagonal blocks are DMA'd and then
+masked away, the (q, kv) block pairs that intersect the causal triangle are
+flattened into ONE sequential grid axis. The schedule — which q block, which
+kv block, and whether this step finalizes its q row — is computed on the host
+from the static shapes and **scalar-prefetched**, so the BlockSpec index maps
+steer each step's DMA straight to a live block. Fully-masked blocks are never
+fetched and never stepped: for S ≫ block size this halves KV bytes moved.
+
+GQA is handled in the index map (kv head = q head // G) so KV tiles are
+fetched once per group, not per q head. Flash running statistics (m, l, acc)
+live in VMEM scratch and carry across the sequential flat axis; each q row's
+segment starts at its kv block 0 (init) and ends at its diagonal block
+(finalize flag).
+
+``flash_prefill_ragged`` additionally scalar-prefetches per-row true lengths:
+padded bucket rows clamp their q/kv block indices to the last live block, and
+Pallas skips the DMA when an index map returns the same block as the previous
+step — so the power-of-two padding tail of a bucketed prefill costs neither
+bandwidth nor MXU flops (compute is ``pl.when``-guarded on the same bound).
 """
 
 from __future__ import annotations
@@ -15,6 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -23,7 +37,61 @@ Array = jax.Array
 NEG_INF = -1e30
 
 
+def _tri_schedule(
+    q_blocks: int, kv_blocks: int, block_q: int, block_k: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten the lower-triangular (q, kv) block pairs into one grid axis.
+
+    Returns int32 arrays ``rows[t]`` (q block), ``cols[t]`` (kv block) and
+    ``lasts[t]`` (1 on the final — diagonal — kv block of each q row, where
+    the kernel normalizes and writes the output block).
+    """
+    rows: list[int] = []
+    cols: list[int] = []
+    lasts: list[int] = []
+    for i in range(q_blocks):
+        need = min(kv_blocks, (i * block_q + block_q - 1) // block_k + 1)
+        for j in range(need):
+            rows.append(i)
+            cols.append(j)
+            lasts.append(1 if j == need - 1 else 0)
+    return (
+        np.asarray(rows, np.int32),
+        np.asarray(cols, np.int32),
+        np.asarray(lasts, np.int32),
+    )
+
+
+def _flash_body(q, k, v, row_mask, k_valid, m_ref, l_ref, acc_ref):
+    """One flash block update: online-softmax accumulate of (q·kᵀ)·v.
+
+    ``row_mask`` is the (bq, bk) validity of each (query, key) pair; masked
+    probabilities are zeroed explicitly so a fully-masked row contributes
+    nothing (l stays 0 → the finalize guard emits zeros, not mean(V)).
+    ``k_valid`` is the (bk, 1) per-key validity: V rows past it are zeroed
+    before the dot because 0·garbage is not 0 when the out-of-bounds block
+    tail reads back NaN/inf — zeroed p alone does not protect the sum."""
+    D = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(D)
+    )
+    s = jnp.where(row_mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    p = jnp.where(row_mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, jnp.where(k_valid, v, 0.0), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+
 def _flash_kernel(
+    rows_ref,  # scalar prefetch: (T,) int32 — q block per flat step
+    cols_ref,  # scalar prefetch: (T,) int32 — kv block per flat step
+    lasts_ref,  # scalar prefetch: (T,) int32 — 1 on each row's final step
     q_ref,  # (1, 1, bq, D)
     k_ref,  # (1, 1, bk, D)
     v_ref,  # (1, 1, bk, D)
@@ -34,10 +102,11 @@ def _flash_kernel(
     *,
     block_q: int,
     block_k: int,
-    kv_blocks: int,
+    seq_len: int,
 ):
-    i = pl.program_id(2)  # q block
-    j = pl.program_id(3)  # kv block
+    t = pl.program_id(2)
+    i = rows_ref[t]
+    j = cols_ref[t]
 
     @pl.when(j == 0)
     def _init():
@@ -45,30 +114,23 @@ def _flash_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
+    # Every scheduled block intersects the causal triangle, so the update
+    # runs unconditionally; only the per-element mask remains (the seq_len
+    # bound covers the padded tail when S is not a block multiple).
     q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
     k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    _flash_body(
+        q_ref[0, 0].astype(jnp.float32),
+        k_ref[0, 0].astype(jnp.float32),
+        v_ref[0, 0].astype(jnp.float32),
+        (k_idx <= q_idx) & (k_idx < seq_len),
+        k_idx.T < seq_len,
+        m_ref,
+        l_ref,
+        acc_ref,
+    )
 
-    @pl.when(j * block_k <= i * block_q + block_q - 1)  # skip above-diagonal
-    def _attend():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        v = v_ref[0, 0].astype(jnp.float32)
-        D = q.shape[-1]
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
-            jnp.float32(D)
-        )
-        s = jnp.where(k_idx <= q_idx, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_cur)
-        p = jnp.exp(s - m_cur)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            p, v, preferred_element_type=jnp.float32
-        )
-        m_ref[...] = m_cur
-
-    @pl.when(j == kv_blocks - 1)
+    @pl.when(lasts_ref[t] == 1)
     def _finalize():
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
             o_ref.dtype
@@ -92,25 +154,162 @@ def flash_prefill(
     G = H // Hkv
     bq = min(block_q, S)
     bk = min(block_k, S)
-    kv_blocks = pl.cdiv(S, bk)
-    grid = (B, H, pl.cdiv(S, bq), kv_blocks)
+    rows, cols, lasts = _tri_schedule(pl.cdiv(S, bq), pl.cdiv(S, bk), bq, bk)
+    grid = (B, H, len(rows))
     out = pl.pallas_call(
-        functools.partial(
-            _flash_kernel, block_q=bq, block_k=bk, kv_blocks=kv_blocks
+        functools.partial(_flash_kernel, block_q=bq, block_k=bk, seq_len=S),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, bq, D), lambda b, h, t, r, c, f: (b, h, r[t], 0)
+                ),
+                pl.BlockSpec(
+                    (1, 1, bk, D),
+                    lambda b, h, t, r, c, f: (b, h // G, c[t], 0),
+                ),
+                pl.BlockSpec(
+                    (1, 1, bk, D),
+                    lambda b, h, t, r, c, f: (b, h // G, c[t], 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, D), lambda b, h, t, r, c, f: (b, h, r[t], 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((bq, D), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+            ],
         ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((bq, D), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-        ],
         out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(lasts), q, k, v)
+    return out
+
+
+def _flash_ragged_kernel(
+    rows_ref,  # scalar prefetch: (T,) int32
+    cols_ref,  # scalar prefetch: (T,) int32
+    lasts_ref,  # scalar prefetch: (T,) int32
+    lens_ref,  # scalar prefetch: (B,) int32 — true length per row
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bq, D)
+    o_ref,  # (1, 1, bq, D)
+    acc_ref,  # (bq, D) f32
+    m_ref,  # (bq, 1) f32
+    l_ref,  # (bq, 1) f32
+    *,
+    block_q: int,
+    block_k: int,
+):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    i = rows_ref[t]
+    j = cols_ref[t]
+    true_len = lens_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    # Blocks fully beyond this row's true length are skipped: their DMA was
+    # already suppressed by the clamped index map, and the update is guarded
+    # here so the running stats are untouched.
+    @pl.when((i * block_q < true_len) & (j * block_k < true_len))
+    def _attend():
+        _flash_body(
+            q_ref[0, 0].astype(jnp.float32),
+            k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32),
+            # the q_idx bound fully masks padded query rows, so they emit
+            # exact zeros rather than attending the row's live prefix
+            (k_idx <= q_idx) & (k_idx < true_len) & (q_idx < true_len),
+            k_idx.T < true_len,
+            m_ref,
+            l_ref,
+            acc_ref,
+        )
+
+    @pl.when(lasts_ref[t] == 1)
+    def _finalize():
+        # padded rows never accumulate (l == 0) and come out exactly zero
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_prefill_ragged(
+    q: Array,  # (B, H, S, D) — S is the padded bucket length
+    k: Array,  # (B, Hkv, S, D)
+    v: Array,  # (B, Hkv, S, D)
+    true_lens: Array,  # (B,) int32 — live tokens per row (may be 0)
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Causal flash attention over power-of-two padded rows.
+
+    Identical to ``flash_prefill`` on rows with ``true_lens[b] == S``; rows
+    shorter than the bucket clamp their block index maps to the last live
+    block (consecutive equal indices ⇒ no DMA) and skip the tail compute.
+    Padded query positions produce exact zeros.
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    rows, cols, lasts = _tri_schedule(pl.cdiv(S, bq), pl.cdiv(S, bk), bq, bk)
+    grid = (B, H, len(rows))
+
+    def _q_map(b, h, t, r, c, f, ln):
+        live = jnp.maximum((ln[b] + bq - 1) // bq, 1)
+        return (b, h, jnp.minimum(r[t], live - 1), 0)
+
+    def _kv_map(b, h, t, r, c, f, ln):
+        live = jnp.maximum((ln[b] + bk - 1) // bk, 1)
+        return (b, h // G, jnp.minimum(c[t], live - 1), 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_ragged_kernel, block_q=bq, block_k=bk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D), _q_map),
+                pl.BlockSpec((1, 1, bk, D), _kv_map),
+                pl.BlockSpec((1, 1, bk, D), _kv_map),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, D), lambda b, h, t, r, c, f, ln: (b, h, r[t], 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((bq, D), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(
+        jnp.asarray(rows),
+        jnp.asarray(cols),
+        jnp.asarray(lasts),
+        true_lens.astype(jnp.int32),
+        q,
+        k,
+        v,
+    )
     return out

@@ -11,7 +11,10 @@ import jax
 
 from . import ref
 from .flash_prefill import flash_prefill as _flash
+from .flash_prefill import flash_prefill_ragged as _flash_ragged
 from .paged_attention import paged_attention as _paged
+from .ragged_extend import ragged_extend as _ragged_extend
+from .sgmv import fused_sgmv as _fused_sgmv
 from .sgmv import sgmv as _sgmv
 
 
@@ -25,6 +28,15 @@ def sgmv(x, lora_a, lora_b, adapter_ids, *, scale: float = 1.0,
         interpret = _auto_interpret()
     return _sgmv(x, lora_a, lora_b, adapter_ids, scale=scale,
                  block_s=block_s, block_o=block_o, interpret=interpret)
+
+
+def fused_sgmv(x, w, lora_a, lora_b, adapter_ids, *, scale: float = 1.0,
+               block_s: int = 128, block_o: int = 128,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _fused_sgmv(x, w, lora_a, lora_b, adapter_ids, scale=scale,
+                       block_s=block_s, block_o=block_o, interpret=interpret)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
@@ -41,4 +53,28 @@ def flash_prefill(q, k, v, *, block_q: int = 128, block_k: int = 128,
     return _flash(q, k, v, block_q=block_q, block_k=block_k, interpret=interpret)
 
 
-__all__ = ["sgmv", "paged_attention", "flash_prefill", "ref"]
+def flash_prefill_ragged(q, k, v, true_lens, *, block_q: int = 128,
+                         block_k: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _flash_ragged(q, k, v, true_lens, block_q=block_q, block_k=block_k,
+                         interpret=interpret)
+
+
+def ragged_extend(q, k, v, start, true_lens, *, block_q: int = 128,
+                  block_k: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _ragged_extend(q, k, v, start, true_lens, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+
+
+__all__ = [
+    "sgmv",
+    "fused_sgmv",
+    "paged_attention",
+    "flash_prefill",
+    "flash_prefill_ragged",
+    "ragged_extend",
+    "ref",
+]

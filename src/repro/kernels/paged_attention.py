@@ -1,13 +1,23 @@
 """Paged decode attention as a Pallas TPU kernel.
 
 vLLM's CUDA paged attention gathers KV pages with per-warp loads. The TPU
-adaptation (DESIGN.md §3) keeps the KV pool as dense
+adaptation (README.md §Kernels) keeps the KV pool as dense
 ``(num_pages, page_size, Hkv, D)`` arrays in HBM and streams one page per
 grid step into VMEM, with the page indirection performed by the **scalar-
 prefetched block table inside the BlockSpec index map** — the TPU-idiomatic
 replacement for pointer-chasing. Softmax is computed online (flash-style
 running max / sum in VMEM scratch) across the page-grid dimension, which is
 sequential on TPU, so the accumulator carries across pages of one sequence.
+
+Length trimming: the prefetched ``lens`` clamp the page index map to each
+sequence's last live page — Pallas skips the DMA when consecutive grid steps
+map to the same block, so pages past ``ceil(lens[b]/page_size)`` cost no
+bandwidth — and the accumulate is ``pl.when``-guarded on the same bound so
+they cost no MXU work either. Rows with ``lens[b] == 0`` (inactive slots in
+a row-masked mixed batch) produce exact zeros: masked probabilities are
+zeroed before they reach the accumulator, so ``l`` stays 0 and the finalize
+guard divides 0/1, not the historical ``exp(NEG_INF - NEG_INF) = 1`` path
+that silently emitted ``mean(V)``.
 """
 
 from __future__ import annotations
@@ -47,25 +57,36 @@ def _paged_attn_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)  # (page, D)
-    D = q.shape[-1]
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
-        jnp.float32(D)
-    )  # (G, page)
-    # mask tokens beyond the sequence length
-    token_idx = p * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
-    s = jnp.where(token_idx < lens_ref[b], s, NEG_INF)
-    m_prev = m_ref[...]  # (G, 1)
-    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_cur)
-    p_ij = jnp.exp(s - m_cur)  # (G, page)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p_ij, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-        p_ij, v, preferred_element_type=jnp.float32
-    )
-    m_ref[...] = m_cur
+    # Pages at or past the sequence length are skipped outright (their DMA
+    # was already suppressed by the clamped index map below).
+    @pl.when(p * page_size < lens_ref[b])
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+        D = q.shape[-1]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+            jnp.float32(D)
+        )  # (G, page)
+        # mask tokens beyond the sequence length
+        token_idx = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1
+        )
+        valid = token_idx < lens_ref[b]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]  # (G, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p_ij = jnp.exp(s - m_cur)  # (G, page)
+        # zero masked probabilities explicitly: when every score in the page
+        # is NEG_INF, exp(s - m) is 1, not 0 — without this, a row whose
+        # length is 0 averages V instead of emitting zeros
+        p_ij = jnp.where(valid, p_ij, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p_ij, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p_ij, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
 
     @pl.when(p == pages_per_seq - 1)
     def _finalize():
@@ -90,6 +111,13 @@ def paged_attention(
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, D)
     grid = (B, Hkv, pages_per_seq)
+
+    def _kv_map(b, h, p, t, l):
+        # clamp to the last live page: steps past it revisit the same block,
+        # and a revisited block is not re-fetched
+        live = jnp.maximum((l[b] + page_size - 1) // page_size, 1)
+        return (t[b, jnp.minimum(p, live - 1)], 0, h, 0)
+
     out = pl.pallas_call(
         functools.partial(
             _paged_attn_kernel, page_size=page_size, pages_per_seq=pages_per_seq
@@ -99,12 +127,8 @@ def paged_attention(
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, G, D), lambda b, h, p, t, l: (b, h, 0, 0)),
-                pl.BlockSpec(
-                    (1, page_size, 1, D), lambda b, h, p, t, l: (t[b, p], 0, h, 0)
-                ),
-                pl.BlockSpec(
-                    (1, page_size, 1, D), lambda b, h, p, t, l: (t[b, p], 0, h, 0)
-                ),
+                pl.BlockSpec((1, page_size, 1, D), _kv_map),
+                pl.BlockSpec((1, page_size, 1, D), _kv_map),
             ],
             out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p, t, l: (b, h, 0, 0)),
             scratch_shapes=[

@@ -49,6 +49,9 @@ def paged_attention_ref(
     valid = jnp.arange(T)[None, :] < lengths[:, None]  # (B, T)
     logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
+    # a row with lengths == 0 has every logit at -1e30: softmax is uniform,
+    # which would emit mean(V) — zero the masked weights so it emits zeros
+    w = jnp.where(valid[:, None, None, :], w, 0.0)
     out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(B, H, D).astype(q.dtype)
 
@@ -71,3 +74,74 @@ def flash_prefill_ref(
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
     return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def fused_sgmv_ref(
+    x: Array,  # (B, S, d_in)
+    w: Array,  # (d_in, d_out)
+    lora_a: Array,  # (N, d_in, r)
+    lora_b: Array,  # (N, r, d_out)
+    adapter_ids: Array,  # (B,) int32 — negative marks a base-model row
+    scale: float = 1.0,
+) -> Array:
+    """Fused base + LoRA projection: x·W + scale·(x·A[id])·B[id]."""
+    base = jnp.einsum(
+        "bsd,do->bso", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    delta = sgmv_ref(x, lora_a, lora_b, adapter_ids, scale=scale)
+    return (base + delta.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_prefill_ragged_ref(
+    q: Array,  # (B, H, S, D)
+    k: Array,  # (B, Hkv, S, D)
+    v: Array,  # (B, Hkv, S, D)
+    true_lens: Array,  # (B,) int32
+) -> Array:
+    """Causal attention over padded rows; padded query positions are zero."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, S, D)
+    logits = jnp.einsum(
+        "bkgsd,bktd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(D))
+    pos = jnp.arange(S)
+    valid = (pos[None, :, None] >= pos[None, None, :]) & (
+        pos[None, None, :] < true_lens[:, None, None]
+    )  # (B, S_q, S_k)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid[:, None, None], w, 0.0)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    out = out * (pos[None, :, None] < true_lens[:, None, None])[:, None, None]
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def ragged_extend_ref(
+    q: Array,  # (B, S, Hq, D)
+    k: Array,  # (B, T, Hkv, D)
+    v: Array,  # (B, T, Hkv, D)
+    start: Array,  # (B,) int32
+    true_lens: Array,  # (B,) int32
+) -> Array:
+    """Suffix attention against the cache; padded query positions are zero."""
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(D))
+    q_pos = start[:, None] + jnp.arange(S)  # (B, S)
+    k_pos = jnp.arange(T)
+    valid = (k_pos[None, None, :] <= q_pos[:, :, None]) & (
+        k_pos[None, None, :] < (start + true_lens)[:, None, None]
+    )  # (B, S, T)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid[:, None, None], w, 0.0)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    live = jnp.arange(S)[None, :] < true_lens[:, None]  # (B, S)
+    out = out * live[:, :, None, None, None]
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,12 +1,20 @@
 """SGMV — segmented/gathered multi-LoRA matmul as a Pallas TPU kernel.
 
 Punica/S-LoRA implement SGMV with CUDA warp-level gathers. The TPU adaptation
-(DESIGN.md §3) moves the gather into the **BlockSpec index map**: the adapter
-id of each sequence is scalar-prefetched, and the A/B weight blocks for grid
-step ``(b, s, o)`` are fetched HBM→VMEM directly from slot ``ids[b]`` of the
-stacked adapter tensors — the MXU then runs dense (tokens×r)·(r×d) tiles.
-Ragged segments become per-sequence grid rows (continuous batching keeps one
-adapter per sequence), so no warp shuffle analogue is needed.
+(README.md §Kernels) moves the gather into the **BlockSpec index map**: the
+adapter id of each sequence is scalar-prefetched, and the A/B weight blocks
+for grid step ``(b, s, o)`` are fetched HBM→VMEM directly from slot
+``ids[b]`` of the stacked adapter tensors — the MXU then runs dense
+(tokens×r)·(r×d) tiles. Ragged segments become per-sequence grid rows
+(continuous batching keeps one adapter per sequence), so no warp shuffle
+analogue is needed.
+
+``fused_sgmv`` folds the base projection into the same kernel: one grid step
+computes ``x·W + scale·(x·A)·B`` for its (token, out) tile, so the activation
+tile makes exactly one trip HBM→VMEM per (token, out) block instead of one
+for the base matmul and another for the LoRA shrink/expand pass. Rows with a
+negative adapter id (shared-prefix spans run with the adapter inactive) keep
+the base term and zero the delta inside the kernel.
 
 Tiling: token tile ``bs`` × out tile ``bo`` with the full ``d_in`` and rank
 ``r`` resident (r ≤ 64, d_in ≤ 8192 ⇒ ≤ 2 MB VMEM per operand at bf16).
@@ -75,3 +83,81 @@ def sgmv(
         interpret=interpret,
     )(adapter_ids, x, lora_a, lora_b)
     return out * live.astype(out.dtype)[:, None, None]
+
+
+def _fused_sgmv_kernel(
+    ids_ref,  # scalar prefetch: (B,) int32 (raw — may be negative)
+    x_ref,  # (1, bs, d_in)
+    w_ref,  # (d_in, bo)
+    a_ref,  # (1, d_in, r)
+    b_ref,  # (1, r, bo)
+    o_ref,  # (1, bs, bo)
+    *,
+    scale: float,
+):
+    b = pl.program_id(0)
+    x = x_ref[0]  # (bs, d_in) — read once, feeds base AND shrink
+    base = jnp.dot(
+        x, w_ref[...], preferred_element_type=jnp.float32
+    )  # (bs, bo)
+    h = jnp.dot(x, a_ref[0], preferred_element_type=jnp.float32)  # (bs, r)
+    delta = jnp.dot(
+        h, b_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+    )  # (bs, bo)
+    # negative id ⇒ base-model row: keep x·W, drop the adapter delta
+    live = (ids_ref[b] >= 0).astype(jnp.float32)
+    o_ref[0] = (base + (scale * live) * delta).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_s", "block_o", "interpret")
+)
+def fused_sgmv(
+    x: Array,  # (B, S, d_in)
+    w: Array,  # (d_in, d_out) — shared base projection
+    lora_a: Array,  # (N, d_in, r)
+    lora_b: Array,  # (N, r, d_out)
+    adapter_ids: Array,  # (B,) int32 — negative marks a base-model row
+    *,
+    scale: float = 1.0,
+    block_s: int = 128,
+    block_o: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Fused base + LoRA projection: ``x·W + scale·(x·A[id])·B[id]``.
+
+    One kernel, one pass over each activation tile per (token, out) block —
+    the LoRA path adds two small MXU ops on the already-resident tile rather
+    than a second kernel launch re-streaming ``x`` from HBM.
+    """
+    B, S, d_in = x.shape
+    N, _, r = lora_a.shape
+    d_out = w.shape[-1]
+    bs = min(block_s, S)
+    bo = min(block_o, d_out)
+    grid = (B, pl.cdiv(S, bs), pl.cdiv(d_out, bo))
+    out = pl.pallas_call(
+        functools.partial(_fused_sgmv_kernel, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bs, d_in), lambda b, s, o, ids: (b, s, 0)),
+                pl.BlockSpec((d_in, bo), lambda b, s, o, ids: (0, o)),
+                # clamp negative ids in the index map only — the kernel reads
+                # the raw id to decide whether the delta survives
+                pl.BlockSpec(
+                    (1, d_in, r),
+                    lambda b, s, o, ids: (jnp.maximum(ids[b], 0), 0, 0),
+                ),
+                pl.BlockSpec(
+                    (1, r, bo),
+                    lambda b, s, o, ids: (jnp.maximum(ids[b], 0), 0, o),
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, bs, bo), lambda b, s, o, ids: (b, s, o)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, d_out), x.dtype),
+        interpret=interpret,
+    )(adapter_ids.astype(jnp.int32), x, w, lora_a, lora_b)
+    return out

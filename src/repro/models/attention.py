@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..kernels import ops as kernel_ops
 from .common import (
     apply_mrope,
     apply_rope,
@@ -34,12 +35,31 @@ from .common import (
 Array = jax.Array
 
 
-def _proj(x, w, lora, name, adapter_ids, scale):
+def _proj(x, w, lora, name, adapter_ids, scale, backend: str = "jnp"):
+    """Base projection plus optional multi-LoRA delta.
+
+    ``backend="pallas"`` routes LoRA-active projections through the fused
+    SGMV kernel (``x·W + scale·(x·A)·B`` in one pass over the activation
+    tile); otherwise — and whenever the projection has no adapter — it is a
+    plain matmul with the gather-einsum ``lora_delta`` reference.
+    """
+    has_lora = lora is not None and name in lora and adapter_ids is not None
+    if has_lora and backend == "pallas":
+        a, b = lora[name]
+        return kernel_ops.fused_sgmv(x, w, a, b, adapter_ids, scale=scale)
     y = x @ w
-    if lora is not None and name in lora and adapter_ids is not None:
+    if has_lora:
         a, b = lora[name]
         y = y + lora_delta(x, a, b, adapter_ids, scale)
     return y
+
+
+def _page_size_for(T: int) -> int:
+    """Largest preferred page size dividing the cache length."""
+    for ps in (128, 64, 32, 16, 8):
+        if T % ps == 0:
+            return ps
+    return 0  # no clean paging — caller falls back to ragged_extend
 
 
 # =============================================================== GQA / MQA
@@ -62,9 +82,10 @@ def _qkv(p, x, cfg: ModelConfig, positions, lora, adapter_ids, lora_scale,
          mrope_positions=None):
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = _proj(x, p["wq"], lora, "q", adapter_ids, lora_scale)
-    k = _proj(x, p["wk"], lora, "k", adapter_ids, lora_scale)
-    v = _proj(x, p["wv"], lora, "v", adapter_ids, lora_scale)
+    backend = cfg.kernel_backend
+    q = _proj(x, p["wq"], lora, "q", adapter_ids, lora_scale, backend)
+    k = _proj(x, p["wk"], lora, "k", adapter_ids, lora_scale, backend)
+    v = _proj(x, p["wv"], lora, "v", adapter_ids, lora_scale, backend)
     q = q.reshape(B, S, cfg.num_heads, hd)
     k = k.reshape(B, S, cfg.num_kv_heads, hd)
     v = v.reshape(B, S, cfg.num_kv_heads, hd)
@@ -215,7 +236,17 @@ def gqa_full(
     B, S, _ = x.shape
     q, k, v = _qkv(p, x, cfg, positions, lora, adapter_ids, lora_scale,
                    mrope_positions)
-    if q_chunk > 0:
+    # the Pallas block-skip kernel implements plain causal-by-index
+    # attention: positions here are always a fresh 0..S-1 arange (train /
+    # fresh prefill), so index-causality == position-causality
+    if (cfg.kernel_backend == "pallas" and q_chunk == 0 and window == 0
+            and cfg.logit_softcap == 0.0):
+        out = kernel_ops.flash_prefill(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+        ).transpose(0, 2, 1, 3)
+    elif q_chunk > 0:
         out = sdpa_blockwise(q, k, v, positions, positions, window=window,
                              softcap=cfg.logit_softcap, q_chunk=q_chunk,
                              k_chunk=q_chunk)
@@ -226,7 +257,8 @@ def gqa_full(
             mask = causal_mask(positions, positions)
         out = sdpa(q, k, v, mask, cfg.logit_softcap)
     out = out.reshape(B, S, -1)
-    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale,
+                cfg.kernel_backend)
     return out, (k, v)
 
 
@@ -319,21 +351,62 @@ def gqa_cached(
     else:
         n_real = token_mask.sum(axis=1)
         last = (start + jnp.maximum(n_real, 1) - 1)[:, None]
-    if window > 0 and T == window:
-        # slot j holds absolute position: largest p <= last with p % W == j
-        j = jnp.arange(T)[None, :]
-        kpos = last - ((last - j) % window)
+    # Pallas data plane (README.md §Kernels): plain causal GQA against the
+    # dense cache goes through the length-trimmed kernels — paged decode for
+    # single-token steps, ragged extend for (row-masked) suffix chunks.
+    # Windowed/ring, int8-quantized and softcapped variants keep the einsum
+    # path: those transforms live outside the kernels' contracts.
+    use_pallas = (
+        cfg.kernel_backend == "pallas"
+        and window == 0
+        and not quant
+        and cfg.logit_softcap == 0.0
+    )
+    if use_pallas and S == 1 and token_mask is None:
+        ps = _page_size_for(T)
+        if ps > 0:
+            # view the dense cache as contiguous pages and decode through
+            # the paged kernel: lengths = start + 1 trims the page sweep
+            pages = T // ps
+            Hkv, Dh = k_eff.shape[2], k_eff.shape[3]
+            tables = jnp.arange(B * pages, dtype=jnp.int32).reshape(B, pages)
+            out = kernel_ops.paged_attention(
+                q[:, 0],
+                k_eff.reshape(B * pages, ps, Hkv, Dh),
+                v_eff.reshape(B * pages, ps, Hkv, Dh),
+                tables,
+                (start + 1).astype(jnp.int32),
+            )[:, None]
+        else:
+            out = kernel_ops.ragged_extend(
+                q, k_eff, v_eff, start.astype(jnp.int32),
+                jnp.ones((B,), jnp.int32),
+            )
+    elif use_pallas:
+        if token_mask is None:
+            true_lens = jnp.full((B,), S, jnp.int32)
+        else:
+            true_lens = token_mask.sum(axis=1).astype(jnp.int32)
+        out = kernel_ops.ragged_extend(
+            q, k_eff, v_eff, start.astype(jnp.int32), true_lens
+        )
     else:
-        kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
-    valid = jnp.logical_and(kpos <= last, kpos >= 0)
-    if window > 0:
-        mask = window_mask(positions, kpos, window)
-        mask = jnp.logical_and(mask, valid[:, None, :])
-    else:
-        mask = causal_mask(positions, kpos, valid)
-    out = sdpa(q, k_eff, v_eff, mask, cfg.logit_softcap)
+        if window > 0 and T == window:
+            # slot j holds absolute position: largest p <= last with p % W == j
+            j = jnp.arange(T)[None, :]
+            kpos = last - ((last - j) % window)
+        else:
+            kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        valid = jnp.logical_and(kpos <= last, kpos >= 0)
+        if window > 0:
+            mask = window_mask(positions, kpos, window)
+            mask = jnp.logical_and(mask, valid[:, None, :])
+        else:
+            mask = causal_mask(positions, kpos, valid)
+        out = sdpa(q, k_eff, v_eff, mask, cfg.logit_softcap)
     out = out.reshape(B, S, -1)
-    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale,
+                cfg.kernel_backend)
     if quant:
         return out, (cache_k, cache_v, cache_k_scale, cache_v_scale)
     return out, (cache_k, cache_v)
@@ -361,7 +434,8 @@ def _mla_q(p, x, cfg, positions, lora, adapter_ids, lora_scale):
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.num_heads
-    q = _proj(x, p["wq"], lora, "q", adapter_ids, lora_scale)
+    q = _proj(x, p["wq"], lora, "q", adapter_ids, lora_scale,
+              cfg.kernel_backend)
     q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -370,7 +444,8 @@ def _mla_q(p, x, cfg, positions, lora, adapter_ids, lora_scale):
 
 def _mla_latent(p, x, cfg, positions, lora, adapter_ids, lora_scale):
     m = cfg.mla
-    ckv = _proj(x, p["w_kv_a"], lora, "kv_a", adapter_ids, lora_scale)
+    ckv = _proj(x, p["w_kv_a"], lora, "kv_a", adapter_ids, lora_scale,
+                cfg.kernel_backend)
     latent, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
     latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
@@ -405,7 +480,8 @@ def mla_full(
     mask = causal_mask(positions, positions)
     out = sdpa(q, k, v, mask)
     out = out.reshape(B, S, -1)
-    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale,
+                cfg.kernel_backend)
     return out, (latent, k_rope)
 
 
@@ -480,5 +556,6 @@ def mla_cached(
     ctx = jnp.einsum("bhst,btl->bshl", w, cache_latent)
     out = jnp.einsum("bshl,lhv->bshv", ctx, w_bv)
     out = out.reshape(B, S, -1)
-    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale)
+    out = _proj(out, p["wo"], lora, "o", adapter_ids, lora_scale,
+                cfg.kernel_backend)
     return out, (cache_latent, cache_krope)

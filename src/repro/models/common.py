@@ -106,7 +106,10 @@ def lora_delta(
     the adapter inactive, so its KV is exactly reusable across adapters.
 
     This is the gather-einsum reference; ``repro.kernels.sgmv`` provides the
-    TPU Pallas kernel with identical semantics (tested against this).
+    TPU Pallas kernel with identical semantics (tested against this), and
+    with ``kernel_backend="pallas"`` the models' projection sites skip this
+    function entirely — ``repro.kernels.fused_sgmv`` computes base + delta in
+    one pass over the activation tile (README.md §Kernels).
     """
     ids = jnp.maximum(adapter_ids, 0)  # clamp so the gather stays in range
     a = jnp.take(lora_a, ids, axis=0)  # (B, d_in, r)

@@ -20,7 +20,10 @@ Array = jax.Array
 
 def build_model(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = False,
                 unroll: bool = False, q_chunk: int = 0,
-                remat_policy: str = "full", kv_quant: bool = False):
+                remat_policy: str = "full", kv_quant: bool = False,
+                kernel_backend: str | None = None):
+    if kernel_backend is not None:
+        cfg = dataclasses.replace(cfg, kernel_backend=kernel_backend)
     if cfg.is_encdec:
         return EncDecLM(cfg, dtype, remat, unroll)
     return LM(cfg, dtype, remat, unroll, q_chunk, remat_policy,

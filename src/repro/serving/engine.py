@@ -70,6 +70,14 @@ def _default_schedule_mode() -> str:
     return os.environ.get("REPRO_SCHEDULE_MODE", "mixed")
 
 
+def _default_kernel_backend() -> str:
+    # "pallas" makes the Pallas kernels the serving data plane (interpret
+    # mode on CPU, Mosaic on TPU); "jnp" is the einsum correctness pin the
+    # differential tests compare against. Same env-override pattern as
+    # REPRO_SCHEDULE_MODE so CI can pin either backend fleet-wide.
+    return os.environ.get("REPRO_KERNEL_BACKEND", "pallas")
+
+
 @dataclasses.dataclass
 class EngineConfig:
     """Engine knobs.
@@ -114,6 +122,14 @@ class EngineConfig:
         default_factory=_default_schedule_mode)  # "mixed" | "alternate"
     step_token_budget: int = 128  # max real tokens per mixed step
     target_step_ms: float = 0.0  # >0: budget servos to this step latency
+    # ---- kernel data plane (repro.kernels; README.md §Kernels).
+    # "pallas": gqa_cached dispatches to the length-trimmed ragged-extend /
+    # paged-decode kernels and LoRA projections fuse into fused_sgmv;
+    # "jnp": the einsum reference path (correctness pin). Models whose
+    # attention sits outside the kernels' contract (windowed/ring, int8-KV,
+    # softcap, MLA/recurrent attention math) keep the jnp path either way.
+    kernel_backend: str = dataclasses.field(
+        default_factory=_default_kernel_backend)  # "pallas" | "jnp"
     # ---- cross-adapter prefix sharing (core/dependency_tree.py trunk).
     # Requests declaring shared_prefix_len > 0 run that span with the
     # adapter INACTIVE (base-model rows) either way; this knob only decides
@@ -130,7 +146,13 @@ class ServingEngine:
             raise ValueError(
                 f"schedule_mode must be 'mixed' or 'alternate', "
                 f"got {config.schedule_mode!r}")
+        if config.kernel_backend not in ("jnp", "pallas"):
+            raise ValueError(
+                f"kernel_backend must be 'jnp' or 'pallas', "
+                f"got {config.kernel_backend!r}")
         self.cfg = config
+        model_cfg = dataclasses.replace(
+            model_cfg, kernel_backend=config.kernel_backend)
         self.model_cfg = model_cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(key)

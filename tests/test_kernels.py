@@ -5,7 +5,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_prefill, paged_attention, ref, sgmv
+from repro.kernels import (
+    flash_prefill,
+    flash_prefill_ragged,
+    fused_sgmv,
+    paged_attention,
+    ragged_extend,
+    ref,
+    sgmv,
+)
 
 KEY = jax.random.PRNGKey(42)
 
@@ -141,3 +149,216 @@ def test_sgmv_adapter_selectivity():
     for i, aid in enumerate([2, 0, 1]):
         want = (x[i] @ a[aid]) @ b[aid]
         np.testing.assert_allclose(np.asarray(out[i]), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------- paged attn edge cases
+def test_paged_attention_zero_length_row_is_zero():
+    """lens[b] == 0 must yield exactly zero output. Historically the kernel
+    softmaxed an all-masked row (exp(-inf - -inf) == 1) and emitted mean(V);
+    the fix zeroes masked probabilities before accumulating."""
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (3, 4, 32), jnp.float32)
+    kp = rand(ks[1], (12, 8, 2, 32), jnp.float32)
+    vp = rand(ks[2], (12, 8, 2, 32), jnp.float32) + 1.0  # nonzero mean(V)
+    tables = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    lens = jnp.asarray([17, 0, 32], jnp.int32)
+    got = np.asarray(paged_attention(q, kp, vp, tables, lens, interpret=True))
+    want = np.asarray(ref.paged_attention_ref(q, kp, vp, tables, lens))
+    assert np.all(got[1] == 0.0), "len-0 row must be zero, not mean(V)"
+    assert np.all(want[1] == 0.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_paged_attention_length_not_page_multiple():
+    """Partial last pages: the trimmed index map must still fetch the page
+    holding the final tokens, and masking must cut exactly at lens[b]."""
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (2, 4, 32), jnp.float32)
+    kp = rand(ks[1], (8, 16, 2, 32), jnp.float32)
+    vp = rand(ks[2], (8, 16, 2, 32), jnp.float32)
+    tables = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    lens = jnp.asarray([33, 7], jnp.int32)  # 3 pages part-full, 1 page part-full
+    got = paged_attention(q, kp, vp, tables, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ------------------------------------------------------------- fused sgmv
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,d_in,r,d_out,N,bs,bo",
+    [
+        (2, 16, 64, 8, 64, 3, 16, 32),
+        (1, 7, 96, 16, 320, 2, 32, 64),   # S, d_out non-multiples of blocks
+        (8, 1, 128, 64, 256, 8, 128, 128),  # decode: S=1 < block_s
+        (3, 100, 64, 4, 72, 2, 32, 32),   # both dims ragged
+    ],
+)
+def test_fused_sgmv_matches_ref(B, S, d_in, r, d_out, N, bs, bo, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = rand(ks[0], (B, S, d_in), dtype)
+    w = rand(ks[1], (d_in, d_out), dtype) * 0.1
+    a = rand(ks[2], (N, d_in, r), dtype) * 0.1
+    b = rand(ks[3], (N, r, d_out), dtype) * 0.1
+    ids = jax.random.randint(ks[4], (B,), -1, N)  # include base-model rows
+    got = fused_sgmv(x, w, a, b, ids, scale=0.5, block_s=bs, block_o=bo,
+                     interpret=True)
+    want = ref.fused_sgmv_ref(x, w, a, b, ids, scale=0.5)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 10,
+    )
+
+
+def test_fused_sgmv_all_negative_ids_is_base_matmul():
+    """A batch of only base-model rows (every id negative) must reduce to
+    the plain x @ W — the delta term fully masked, no NaN from the clamped
+    slot-0 gather."""
+    ks = jax.random.split(KEY, 4)
+    x = rand(ks[0], (4, 9, 48), jnp.float32)
+    w = rand(ks[1], (48, 80), jnp.float32)
+    a = rand(ks[2], (2, 48, 8), jnp.float32)
+    b = rand(ks[3], (2, 8, 80), jnp.float32)
+    ids = jnp.asarray([-1, -1, -1, -1], jnp.int32)
+    got = fused_sgmv(x, w, a, b, ids, scale=2.0, block_s=16, block_o=32,
+                     interpret=True)
+    want = jnp.einsum("bsd,do->bso", x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_sgmv_all_negative_ids_is_zero():
+    ks = jax.random.split(KEY, 3)
+    x = rand(ks[0], (3, 5, 32), jnp.float32)
+    a = rand(ks[1], (2, 32, 4), jnp.float32)
+    b = rand(ks[2], (2, 4, 16), jnp.float32)
+    ids = jnp.asarray([-1, -2, -1], jnp.int32)
+    out = sgmv(x, a, b, ids, interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ------------------------------------------------------ flash prefill edges
+def test_flash_prefill_s_not_block_multiple():
+    """S=100 with 32-blocks: the padded tail rows must come back zero-safe
+    and the live rows must match the oracle exactly."""
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (1, 4, 100, 32), jnp.float32)
+    k = rand(ks[1], (1, 2, 100, 32), jnp.float32)
+    v = rand(ks[2], (1, 2, 100, 32), jnp.float32)
+    got = flash_prefill(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ----------------------------------------------------- flash prefill ragged
+@pytest.mark.parametrize(
+    "lens",
+    [
+        [64, 64],          # full — must equal the plain kernel
+        [64, 33],          # ragged, non-multiple of block
+        [17, 0],           # tiny + empty row
+    ],
+)
+def test_flash_prefill_ragged_matches_ref(lens):
+    B, H, Hkv, S, D = len(lens), 4, 2, 64, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, H, S, D), jnp.float32)
+    k = rand(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = rand(ks[2], (B, Hkv, S, D), jnp.float32)
+    tl = jnp.asarray(lens, jnp.int32)
+    got = flash_prefill_ragged(q, k, v, tl, block_q=16, block_k=16,
+                               interpret=True)
+    want = ref.flash_prefill_ragged_ref(q, k, v, tl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+    # pad query rows (and the len-0 batch row) must be exactly zero
+    for i, ln in enumerate(lens):
+        if ln < S:
+            assert float(jnp.abs(got[i, :, ln:]).max()) == 0.0
+
+
+def test_flash_prefill_ragged_full_equals_plain():
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (2, 4, 64, 32), jnp.float32)
+    k = rand(ks[1], (2, 2, 64, 32), jnp.float32)
+    v = rand(ks[2], (2, 2, 64, 32), jnp.float32)
+    tl = jnp.asarray([64, 64], jnp.int32)
+    rag = flash_prefill_ragged(q, k, v, tl, block_q=16, block_k=16,
+                               interpret=True)
+    plain = flash_prefill(q, k, v, block_q=16, block_k=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rag), np.asarray(plain))
+
+
+# ------------------------------------------------------------ ragged extend
+@pytest.mark.parametrize(
+    "starts,lens,S,T",
+    [
+        ([0, 0], [32, 32], 32, 64),        # pure prefill into empty cache
+        ([16, 48], [32, 17], 32, 96),      # extend mid-cache, ragged lens
+        ([96, 5], [32, 0], 32, 128),       # frontier at the edge + empty row
+        ([16, 40], [32, 17], 32, 90),      # T not a block multiple
+    ],
+)
+def test_ragged_extend_matches_ref(starts, lens, S, T):
+    B, H, Hkv, D = len(starts), 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, S, H, D), jnp.float32)
+    k = rand(ks[1], (B, T, Hkv, D), jnp.float32)
+    v = rand(ks[2], (B, T, Hkv, D), jnp.float32)
+    st = jnp.asarray(starts, jnp.int32)
+    tl = jnp.asarray(lens, jnp.int32)
+    got = ragged_extend(q, k, v, st, tl, block_q=16, block_k=16,
+                        interpret=True)
+    want = ref.ragged_extend_ref(q, k, v, st, tl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+    for i, ln in enumerate(lens):
+        if ln < S:
+            assert float(jnp.abs(got[i, ln:]).max()) == 0.0
+
+
+# -------------------------------------------------------- counted traffic
+def test_counting_trimmed_strictly_cheaper():
+    """The analytic counters must show the trimmed grids moving strictly
+    fewer KV bytes than their rectangular/full baselines — the regression
+    invariant the kernel-regression CI job gates on."""
+    from repro.kernels import counting
+
+    tri = counting.flash_prefill_counts(1, 4, 2, 512, 64, block_q=64,
+                                        block_k=64, variant="block_skip")
+    rect = counting.flash_prefill_counts(1, 4, 2, 512, 64, block_q=64,
+                                         block_k=64, variant="rect")
+    assert tri["kv_bytes"] < rect["kv_bytes"]
+    assert tri["flops"] == rect["flops"]  # same math, fewer fetches
+
+    rag = counting.flash_prefill_counts(4, 4, 2, 512, 64, block_q=64,
+                                        block_k=64,
+                                        true_lens=[512, 300, 64, 0])
+    full = counting.flash_prefill_counts(4, 4, 2, 512, 64, block_q=64,
+                                         block_k=64, variant="block_skip")
+    assert rag["kv_bytes"] < full["kv_bytes"]
+
+    trim = counting.paged_attention_counts(4, 8, 2, 64, 16, 16,
+                                           [256, 131, 7, 0], trimmed=True)
+    dense = counting.paged_attention_counts(4, 8, 2, 64, 16, 16,
+                                            [256, 131, 7, 0], trimmed=False)
+    assert trim["kv_bytes"] < dense["kv_bytes"]
+
+    ext = counting.ragged_extend_counts(2, 4, 2, 128, 512, 64, [0, 384],
+                                        [128, 65], trimmed=True)
+    ext_d = counting.ragged_extend_counts(2, 4, 2, 128, 512, 64, [0, 384],
+                                          [128, 65], trimmed=False)
+    assert ext["kv_bytes"] < ext_d["kv_bytes"]
+
+
+def test_counting_fused_sgmv_single_pass():
+    from repro.kernels import counting
+
+    fused = counting.sgmv_counts(8, 256, 512, 512, 32, fused=True)
+    unfused = counting.sgmv_counts(8, 256, 512, 512, 32, fused=False)
+    assert fused["x_passes_per_block"] == 1.0
+    assert unfused["x_passes_per_block"] == 2.0
+    assert fused["kernel_launches"] == 1
+    assert unfused["kernel_launches"] == 2
