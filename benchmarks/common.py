@@ -86,6 +86,50 @@ class CsvOut:
         self.rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.3f},{derived}")
 
+    def write_csv(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for name, us, derived in self.rows:
+                f.write(f"{name},{us:.3f},{derived}\n")
+
+
+def fmt_fields(row, fields=(), **extra) -> str:
+    """Build the harness's ``k=v;k2=v2`` derived string from a mapping.
+
+    Each entry of ``fields`` is ``"alias=key:fmt"`` — ``alias=`` and
+    ``:fmt`` both optional, so ``"n=n_finished"``, ``"p99_q=p99_queue:.3f"``
+    and ``"dominant"`` all work. ``extra`` appends pre-formatted literals.
+    This is THE derived-string builder: every fig/prefill/kernels bench row
+    routes through it (via :func:`emit_report` for report-backed rows), so
+    field renames surface as KeyErrors here instead of silently drifting
+    f-strings apart across benchmark modules.
+    """
+    parts = []
+    for spec in fields:
+        alias, sep, rhs = spec.partition("=")
+        key = rhs if sep else alias
+        key, fsep, fmt = key.partition(":")
+        if not sep:
+            alias = key
+        v = row[key]
+        parts.append(f"{alias}={format(v, fmt) if fsep else v}")
+    for k, v in extra.items():
+        parts.append(f"{k}={v}")
+    return ";".join(parts)
+
+
+def emit_report(out: CsvOut, name: str, us_per_call: float, report,
+                fields=(), **extra) -> None:
+    """Emit one CSV row whose derived string is drawn from a report.
+
+    ``report`` is anything with a ``.row()`` (``ServingReport``) or a plain
+    mapping (e.g. ``SimResult.summary()``); ``fields``/``extra`` follow
+    :func:`fmt_fields`. New ``ServingReport`` fields become available to
+    every benchmark's derived strings without touching the emitters.
+    """
+    row = report.row() if hasattr(report, "row") else report
+    out.emit(name, us_per_call, fmt_fields(row, fields, **extra))
+
 
 def peak_throughput(model: str, scenario: str, variant: str, n_loras: int,
                     ttft_slo: float = 0.5, rates=None) -> float:

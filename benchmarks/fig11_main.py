@@ -6,7 +6,7 @@ rates from low load up to ~peak and report the average TTFT/TPOT over the
 sweep, plus the 500 ms-SLO peak throughput.
 """
 
-from .common import CsvOut, QUICK, peak_throughput, run_sweep
+from .common import CsvOut, QUICK, emit_report, peak_throughput, run_sweep
 
 SYSTEMS = ("fastlibra", "vllm", "slora")
 
@@ -21,10 +21,12 @@ def run(out: CsvOut) -> None:
             for sysname in SYSTEMS:
                 ttft, tpot, _ = run_sweep(model, scenario, sysname, n_loras)
                 results[(scenario, model, n_loras, sysname)] = (ttft, tpot)
-                out.emit(
+                emit_report(
+                    out,
                     f"fig11/{scenario}/{model.split('-')[1]}-{n_loras}/{sysname}/ttft",
                     ttft * 1e6,
-                    f"tpot_ms={tpot*1e3:.2f}",
+                    {"tpot_ms": tpot * 1e3},
+                    ("tpot_ms:.2f",),
                 )
     # paper headline: average reduction vs each baseline
     for base in ("vllm", "slora"):

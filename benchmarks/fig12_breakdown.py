@@ -1,16 +1,21 @@
 """Fig. 12 — TTFT breakdown: queue / LoRA cold-start / KV cold-start."""
 
-from .common import CsvOut, run_sim
+from .common import CsvOut, emit_report, run_sim
 
 
 def run(out: CsvOut) -> None:
     for scenario in ("chatbot", "translation", "agent"):
         for sysname in ("fastlibra", "vllm", "slora"):
             res = run_sim("llama-7b", scenario, sysname, n_loras=50)
-            out.emit(
+            s = res.summary()
+            emit_report(
+                out,
                 f"fig12/{scenario}/{sysname}/breakdown",
                 res.avg_ttft * 1e6,
-                f"queue_ms={res.avg_queue*1e3:.2f};"
-                f"lora_cold_ms={res.avg_lora_coldstart*1e3:.2f};"
-                f"kv_cold_ms={res.avg_kv_coldstart*1e3:.2f}",
+                {
+                    "queue_ms": s["avg_queue"] * 1e3,
+                    "lora_cold_ms": s["avg_lora_cold"] * 1e3,
+                    "kv_cold_ms": s["avg_kv_cold"] * 1e3,
+                },
+                ("queue_ms:.2f", "lora_cold_ms:.2f", "kv_cold_ms:.2f"),
             )

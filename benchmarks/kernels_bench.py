@@ -37,7 +37,7 @@ from repro.kernels import (
     sgmv,
 )
 
-from .common import CsvOut
+from .common import CsvOut, fmt_fields
 from .roofline import kernel_roofline
 
 ON_TPU = jax.default_backend() == "tpu"
@@ -60,11 +60,10 @@ def _roofline_tag(counts: dict, t_us: float | None = None) -> str:
     rl = kernel_roofline(counts["flops"], counts.get("hbm_bytes",
                                                      counts.get("x_bytes", 0)),
                          measured_us=t_us if ON_TPU else None)
-    tag = (f"bound_us={rl['bound_us']:.2f};dom={rl['dominant']};"
-           f"ceiling_frac={rl['ceiling_fraction']:.3f}")
+    fields = ["bound_us:.2f", "dom=dominant", "ceiling_frac=ceiling_fraction:.3f"]
     if "achieved_fraction" in rl:
-        tag += f";achieved_frac={rl['achieved_fraction']:.3f}"
-    return tag
+        fields.append("achieved_frac=achieved_fraction:.3f")
+    return fmt_fields(rl, fields)
 
 
 def _emit_pair(out: CsvOut, name: str, kernel_fn, ref_fn, args, kw,
@@ -328,10 +327,7 @@ def main(argv: list[str] | None = None) -> int:
     print("name,us_per_call,derived")
     checks = run(out, quick=args.quick, checks=Checks(floors=args.floors))
     if args.csv:
-        with open(args.csv, "w") as f:
-            f.write("name,us_per_call,derived\n")
-            for name, us, derived in out.rows:
-                f.write(f"{name},{us:.3f},{derived}\n")
+        out.write_csv(args.csv)
         print(f"# wrote {len(out.rows)} rows to {args.csv}", file=sys.stderr)
     if args.check:
         if checks.failures:

@@ -31,7 +31,11 @@ metadata stripped (FCFS) — paired-median interactive TTFT ratio and batch
 throughput ratio.
 
 CLI: ``PYTHONPATH=src python benchmarks/prefill_bench.py
-[--quick] [--recurrent] [--shared-prefix] [--mixed-slo]``.
+[--quick] [--recurrent] [--shared-prefix] [--mixed-slo]
+[--trace-out PATH]``. ``--trace-out`` serves the trace once with
+libra-trace armed and dumps Perfetto-loadable Chrome trace-event JSON
+(given alone it skips the timed comparison — tracing a timed run would
+perturb it).
 """
 
 from __future__ import annotations
@@ -47,7 +51,7 @@ N_LORAS = 8
 MODES = ("mixed", "alternate", "eager")
 
 
-def _engine(mode: str):
+def _engine(mode: str, trace: bool = False):
     import dataclasses
 
     import jax
@@ -65,6 +69,7 @@ def _engine(mode: str):
         # every row even with all slots decoding, so the comparison against
         # alternate mode isolates the scheduling structure
         step_token_budget=8 + 8 * 64, target_step_ms=0.0,
+        trace=trace,
     )
     eng = ServingEngine(cfg, ecfg, key=jax.random.PRNGKey(0))
     for i in range(N_LORAS):
@@ -207,12 +212,18 @@ def _paired_ratio(pairs, field) -> float:
 
 
 def _emit_mode(out, prefix: str, mode: str, rep) -> None:
-    out.emit(f"{prefix}/{mode}/mean_ttft", rep.avg_ttft * 1e6,
-             f"n={rep.n_finished};compiles={rep.prefill_compiles};"
-             f"batch={rep.avg_prefill_batch:.2f};p99_q={rep.p99_queue:.3f}")
-    out.emit(f"{prefix}/{mode}/p99_tpot", rep.p99_tpot * 1e6,
-             f"step_ms={rep.avg_step_ms:.2f};"
-             f"budget_util={rep.budget_utilization:.3f}")
+    try:
+        from benchmarks.common import emit_report
+    except ImportError:  # invoked as a script from benchmarks/
+        from common import emit_report
+
+    emit_report(out, f"{prefix}/{mode}/mean_ttft", rep.avg_ttft * 1e6, rep,
+                ("n=n_finished", "compiles=prefill_compiles",
+                 "batch=avg_prefill_batch:.2f", "p99_q=p99_queue:.3f",
+                 "stall=avg_stall:.4f"))
+    emit_report(out, f"{prefix}/{mode}/p99_tpot", rep.p99_tpot * 1e6, rep,
+                ("step_ms=avg_step_ms:.2f",
+                 "budget_util=budget_utilization:.3f"))
 
 
 def run(out, prefix: str = "prefill", n: int = N_REQUESTS) -> None:
@@ -513,6 +524,21 @@ def run_mixed_slo(out, prefix: str = "prefill/slo", repeats: int = 4,
              f"preemptions={preemptions}")
 
 
+def trace_run(path: str, n: int = N_REQUESTS) -> None:
+    """One traced mixed-mode pass over the seed-0 multi-LoRA trace: arms
+    libra-trace on a fresh engine, serves the trace, and dumps Chrome
+    trace-event JSON to ``path`` (load it in Perfetto or summarize with
+    ``python -m repro.obs.report``). Untimed — tracing is for inspection,
+    the timed comparisons above always run with the tracer disabled."""
+    eng = _engine("mixed", trace=True)
+    for r in _trace(n=n):
+        eng.submit(r)
+    eng.run(max_steps=100_000)
+    eng.export_trace(path)
+    print(f"# wrote trace to {path} "
+          f"(summarize: python -m repro.obs.report {path})")
+
+
 def run_sim_modes(out, prefix: str = "prefill/sim") -> None:
     """Simulator cross-check: the same mode split at Llama-7B scale."""
     try:
@@ -550,8 +576,16 @@ def main() -> None:
                     help="run ONLY the cross-adapter prefix-sharing scenario")
     ap.add_argument("--mixed-slo", action="store_true",
                     help="run ONLY the bursty mixed-SLO tiering scenario")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="serve the 32-request trace once with libra-trace "
+                         "armed and dump Chrome trace-event JSON here "
+                         "(Perfetto-loadable; see README §Observability)")
     args = ap.parse_args()
     out = CsvOut()
+    if args.trace_out:
+        trace_run(args.trace_out, n=12 if args.quick else N_REQUESTS)
+        if not (args.recurrent or args.shared_prefix or args.mixed_slo):
+            return
     if args.recurrent:
         run_recurrent(out, n_prompts=4 if args.quick else 6,
                       rounds=3, plen=64 if args.quick else 96)

@@ -11,6 +11,9 @@ wins or strip its safety net:
 * ``bare-assert``       — ``assert`` on mutation paths (vanishes under -O)
 * ``dict-order-tiebreak`` — min/max scheduling decisions whose ties resolve
   by dict/insertion order
+* ``raw-clock``         — wall-clock ``time.time()`` / ``print()`` calls in
+  the ``core``/``serving`` hot packages (monotonic-clock contract, hot-path
+  I/O; emit via :mod:`repro.obs` instead)
 
 This package is stdlib-only (no jax import) so the lint job needs no
 accelerator toolchain. See :mod:`repro.analysis.registry` for how to add a

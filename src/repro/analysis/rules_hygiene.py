@@ -1,4 +1,5 @@
-"""Hygiene rules: asserts that vanish under -O, dict-order-dependent ties.
+"""Hygiene rules: asserts that vanish under -O, dict-order-dependent ties,
+wall-clock/print usage on serving hot paths.
 
 These are generic-Python hazards, but both have bitten (or nearly bitten)
 this codebase specifically: the pool's structural checks were ``assert``
@@ -12,8 +13,9 @@ choice depend on registration order rather than anything intentional.
 from __future__ import annotations
 
 import ast
+from pathlib import PurePath
 
-from .registry import ModuleInfo, ProjectContext, Violation, register
+from .registry import ModuleInfo, ProjectContext, Violation, dotted_name, register
 
 
 def _enclosing_functions(tree: ast.Module) -> dict[int, str]:
@@ -98,4 +100,44 @@ def check_dict_order_tiebreak(module: ModuleInfo, ctx: ProjectContext):
             f"{call.func.id}() with a scalar key resolves ties by iteration "
             f"order; use a tuple key with an explicit tiebreak",
         ))
+    return out
+
+
+def _in_hot_package(path: str) -> bool:
+    """True for modules under the serving hot path (src/repro/{core,serving})."""
+    return bool({"core", "serving"} & set(PurePath(path).parts))
+
+
+@register(
+    "raw-clock",
+    summary="time.time() / print() on a core/serving hot path",
+    rationale=(
+        "the engine and cache pool run inside the serving step loop: "
+        "time.time() is wall-clock (jumps under NTP slew, breaks the "
+        "monotonic engine-clock contract every TTFT/queue metric and the "
+        "libra-trace timeline assume — use time.monotonic()/perf_counter()), "
+        "and print() is synchronous unbuffered I/O per call on the hot path "
+        "— emit through the Tracer (repro.obs) or a logger instead"
+    ),
+)
+def check_raw_clock(module: ModuleInfo, ctx: ProjectContext):
+    if not _in_hot_package(module.path):
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name == "time.time":
+            out.append(Violation(
+                module.path, node.lineno, node.col_offset, "raw-clock",
+                "wall-clock time.time() on a hot path; use the monotonic "
+                "engine clock (time.monotonic()/perf_counter())",
+            ))
+        elif name == "print":
+            out.append(Violation(
+                module.path, node.lineno, node.col_offset, "raw-clock",
+                "print() on a hot path; emit through the Tracer "
+                "(repro.obs) or a logger",
+            ))
     return out

@@ -51,6 +51,25 @@ from .invariants import (
     check_pool_invariants,
     sanitize_enabled,
 )
+from ..obs import (
+    EV_CACHE_ADMIT,
+    EV_CACHE_COMMIT,
+    EV_CACHE_DROP,
+    EV_CACHE_EVICT,
+    EV_CACHE_LOAD,
+    EV_CACHE_PREEMPT,
+    EV_CACHE_SWAP_IN,
+    EV_CACHE_SWAP_OUT,
+    NULL_TRACER,
+)
+
+
+def _audit_kind(node: "Node") -> str:
+    """Audit-log kind label: LoRA / KV / STATE, with the base-model trunk
+    (adapter-independent KV, ``lora_id=None``) called out as shared-trunk."""
+    if node.kind is NodeKind.KV and getattr(node, "is_shared", False):
+        return "shared-trunk"
+    return node.kind.value
 
 
 def _checked(fn):
@@ -227,8 +246,13 @@ class CacheManager:
         hbm_bytes: int,
         host_bytes: int,
         hardware: Optional[HardwareModel] = None,
+        tracer=None,
     ):
         self.config = config
+        # cache-decision audit log (repro.obs): every admit/evict/swap is
+        # recorded with node id, kind, bytes and cost-model score when a
+        # real tracer is attached; the default is the no-op singleton.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._sanitize = (
             config.sanitize if config.sanitize is not None else sanitize_enabled()
         )
@@ -306,6 +330,10 @@ class CacheManager:
             lora_id, size_bytes, nblocks, tier=Residency.HOST, now=now
         )
         node.host_blocks = blocks
+        if self.tracer.enabled:
+            self.tracer.audit(EV_CACHE_LOAD, now, node_id=node.node_id,
+                              kind=_audit_kind(node), lora=lora_id,
+                              bytes=size_bytes)
         return SwapOp(
             SwapKind.LOAD_NEW, NodeKind.LORA, lora_id, size_bytes,
             dst_blocks=tuple(blocks), node_id=node.node_id,
@@ -483,6 +511,13 @@ class CacheManager:
                         for n in lost
                     ),
                 )
+        if self.tracer.enabled:
+            self.tracer.audit(
+                EV_CACHE_ADMIT, now,
+                swapped_in=[n.node_id for n in needed],
+                pinned=[n.node_id for n in pinned],
+                hbm_hit_tokens=lookup.hbm_hit_tokens,
+                host_hit_tokens=lookup.host_hit_tokens)
         return AdmitResult(ops=ops, pinned=pinned)
 
     @_checked
@@ -613,6 +648,11 @@ class CacheManager:
                 node.num_blocks = len(own)
                 attached.append(node)
             parent = node
+        if self.tracer.enabled:
+            for n in attached:
+                self.tracer.audit(EV_CACHE_COMMIT, now, node_id=n.node_id,
+                                  kind=_audit_kind(n), lora=n.lora_id,
+                                  bytes=n.size_bytes, query=query_id)
         # Validity repair: the inserts may have descended through ancestors
         # that were swapped out after this query's lookup (the query
         # recomputed their KVs rather than matching them). Keeping a new
@@ -665,6 +705,10 @@ class CacheManager:
             self.abort_running(query_id)
         self._preempted.add(query_id)
         self.stats.preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.audit(
+                EV_CACHE_PREEMPT, now, query=query_id,
+                folded_node=(node.node_id if node is not None else None))
         return node
 
     def estimate_ttft(self, lora_id: str, history_tokens: Sequence[int],
@@ -770,6 +814,10 @@ class CacheManager:
         node.num_blocks = nblocks
         node.size_bytes = self.config.state_bytes
         node.tier = Residency.HBM
+        if self.tracer.enabled:
+            self.tracer.audit(EV_CACHE_COMMIT, now, node_id=node.node_id,
+                              kind=_audit_kind(node), lora=lora_id,
+                              bytes=node.size_bytes)
         return node
 
     # ------------------------------------------------------------- swap core
@@ -782,6 +830,10 @@ class CacheManager:
         if node.tier is Residency.HBM:
             return SwapOp(SwapKind.SWAP_IN, node.kind, node.lora_id, 0, node_id=node.node_id)
         pool = self._pool_for(node.kind)
+        # score sampled pre-mutation so the audit log reflects the state the
+        # decision was made in (promotion resets last_access below)
+        score = (self.scorer.score(node, now) if self.tracer.enabled
+                 else None)
         shield = (protect or set()) | {node.node_id}
         if not self._make_room(pool, node.num_blocks, now, protect=shield):
             return None
@@ -799,12 +851,20 @@ class CacheManager:
             src_blocks=tuple(src), dst_blocks=tuple(dst), node_id=node.node_id,
         )
         self._pending_ops.append(op)
+        if self.tracer.enabled:
+            self.tracer.audit(EV_CACHE_SWAP_IN, now, node_id=node.node_id,
+                              kind=_audit_kind(node), lora=node.lora_id,
+                              bytes=node.size_bytes, score=score)
         return op
 
     def _swap_out_node(self, node: Node, now: float) -> SwapOp:
         """HBM -> host (or drop if the host tier is full)."""
         pool = self._pool_for(node.kind)
         src = node.hbm_blocks
+        # every eviction is auditable with the score it was evicted AT:
+        # sample before the move mutates tier/blocks
+        score = (self.scorer.score(node, now) if self.tracer.enabled
+                 else None)
         if pool.can_allocate(Tier.HOST, node.num_blocks):
             dst = pool.allocate(Tier.HOST, node.num_blocks)
             pool.release(Tier.HBM, src)
@@ -818,6 +878,11 @@ class CacheManager:
                 src_blocks=tuple(src), dst_blocks=tuple(dst), node_id=node.node_id,
             )
             self._pending_ops.append(op)
+            if self.tracer.enabled:
+                self.tracer.audit(EV_CACHE_SWAP_OUT, now,
+                                  node_id=node.node_id,
+                                  kind=_audit_kind(node), lora=node.lora_id,
+                                  bytes=node.size_bytes, score=score)
             return op
         # host full: drop. KV/STATE nodes are removed (data lost); LoRA nodes
         # keep their tree identity (weights reloadable from disk) with
@@ -831,6 +896,10 @@ class CacheManager:
             src_blocks=tuple(src), node_id=node.node_id,
         )
         self._pending_ops.append(op)
+        if self.tracer.enabled:
+            self.tracer.audit(EV_CACHE_DROP, now, node_id=node.node_id,
+                              kind=_audit_kind(node), lora=node.lora_id,
+                              bytes=node.size_bytes, score=score)
         if node.kind is not NodeKind.LORA and not node.children:
             self.tree.remove(node)
         else:
@@ -884,6 +953,18 @@ class CacheManager:
             # node_id tiebreak: equal scores (e.g. cold same-size nodes) must
             # not make victim choice depend on tree-dict insertion order
             victim = min(cands, key=lambda n: (self.scorer.score(n, now), n.node_id))
+            if self.tracer.enabled:
+                # decision record: the victim's score and the surviving
+                # candidates it beat (lowest-scored first)
+                ranked = sorted(
+                    ((self.scorer.score(n, now), n.node_id) for n in cands
+                     if n is not victim))
+                self.tracer.audit(
+                    EV_CACHE_EVICT, now, node_id=victim.node_id,
+                    kind=_audit_kind(victim), lora=victim.lora_id,
+                    bytes=victim.size_bytes,
+                    score=self.scorer.score(victim, now), reason="demand",
+                    beat=[[nid, sc] for sc, nid in ranked[:3]])
             self._swap_out_node(victim, now)
         return True
 

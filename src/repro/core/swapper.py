@@ -24,7 +24,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from .cache_manager import CacheManager, SwapOp
+from ..obs import EV_CACHE_EVICT, EV_CACHE_PREFETCH
+from .cache_manager import CacheManager, SwapOp, _audit_kind
 from .dependency_tree import NodeKind
 
 
@@ -96,6 +97,18 @@ class CacheSwapper:
                 break
             # node_id tiebreak keeps victim choice deterministic on equal Eval
             victim = min(cands, key=lambda n: (mgr.scorer.score(n, now), n.node_id))
+            if mgr.tracer.enabled:
+                # audit the proactive-pressure decision: victim score + the
+                # surviving candidates it beat (lowest-scored first)
+                ranked = sorted(
+                    ((mgr.scorer.score(n, now), n.node_id) for n in cands
+                     if n is not victim))
+                mgr.tracer.audit(
+                    EV_CACHE_EVICT, now, node_id=victim.node_id,
+                    kind=_audit_kind(victim), lora=victim.lora_id,
+                    bytes=victim.size_bytes,
+                    score=mgr.scorer.score(victim, now), reason="pressure",
+                    beat=[[nid, sc] for sc, nid in ranked[:3]])
             ops.append(mgr._swap_out_node(victim, now))
         return ops
 
@@ -129,6 +142,18 @@ class CacheSwapper:
             op = mgr._swap_in_node(best, now)
             if op is None:
                 break
+            if mgr.tracer.enabled:
+                # idle-prefetch decision: chosen node + the runners-up it
+                # outscored (highest-scored first)
+                ranked = sorted(
+                    ((mgr.scorer.score(n, now), n.node_id) for n in cands
+                     if n is not best), reverse=True)
+                mgr.tracer.audit(
+                    EV_CACHE_PREFETCH, now, node_id=best.node_id,
+                    kind=_audit_kind(best), lora=best.lora_id,
+                    bytes=best.size_bytes,
+                    score=mgr.scorer.score(best, now),
+                    beat=[[nid, sc] for sc, nid in ranked[:3]])
             ops.append(op)
         return ops
 
@@ -144,6 +169,7 @@ def make_fastlibra(
     state_bytes: int = 0,
     sanitize: Optional[bool] = None,
     share_prefix_kv: bool = True,
+    tracer=None,
 ) -> tuple[CacheManager, CacheSwapper]:
     """Factory for FASTLIBRA and every paper baseline/ablation.
 
@@ -158,6 +184,9 @@ def make_fastlibra(
     ``share_prefix_kv=False`` disables the cross-adapter shared trunk:
     declared shared spans are still base-computed but cached per adapter —
     the differential baseline for the sharing refactor.
+
+    ``tracer`` attaches a :class:`repro.obs.Tracer` so every manager and
+    swapper cache decision lands in the audit log (default: no-op tracer).
     """
     from .cache_manager import ManagerConfig
 
@@ -193,5 +222,6 @@ def make_fastlibra(
         sw = SwapperConfig(enabled=False)
     else:
         raise ValueError(f"unknown variant {variant!r}")
-    mgr = CacheManager(cfg, hbm_bytes, host_bytes, hardware=hardware)
+    mgr = CacheManager(cfg, hbm_bytes, host_bytes, hardware=hardware,
+                       tracer=tracer)
     return mgr, CacheSwapper(mgr, sw)

@@ -30,15 +30,22 @@ def main() -> None:
                     help="use the full architecture config (TPU-scale)")
     ap.add_argument("--journal", default="/tmp/repro_serve_journal.jsonl")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="arm libra-trace and dump Chrome trace-event JSON "
+                         "here (load in Perfetto; see README §Observability)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
     if not args.full_config:
         cfg = configs.reduced(cfg)
+    # --trace-out arms the tracer explicitly; otherwise the EngineConfig
+    # default picks up REPRO_TRACE=1
+    ekw = {"trace": True} if args.trace_out else {}
     engine = ServingEngine(
         cfg,
         EngineConfig(hbm_bytes=8 << 20, host_bytes=64 << 20, block_size=4,
-                     max_batch_slots=4, max_seq_len=128, variant=args.variant),
+                     max_batch_slots=4, max_seq_len=128, variant=args.variant,
+                     **ekw),
         key=jax.random.PRNGKey(args.seed),
     )
     for i in range(args.adapters):
@@ -62,6 +69,10 @@ def main() -> None:
     for r in engine.finished:
         journal.record_finish(r.request_id)
     print("report:", report.row())
+    if args.trace_out:
+        engine.export_trace(args.trace_out)
+        print(f"trace: wrote {args.trace_out} "
+              f"(summarize: python -m repro.obs.report {args.trace_out})")
 
 
 if __name__ == "__main__":

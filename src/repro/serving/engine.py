@@ -45,6 +45,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import CacheManager, CacheSwapper, NodeKind, Residency, SwapKind, make_fastlibra
+from ..obs import (
+    ATTRIB_CATEGORIES,
+    EV_ABORT,
+    EV_ADMIT,
+    EV_CALIBRATION,
+    EV_DECODE_STEP,
+    EV_FINISH,
+    EV_PREEMPT,
+    EV_PREFILL_CHUNK,
+    EV_QUEUE,
+    EV_RESUME,
+    EV_STEP,
+    EV_SUBMIT,
+    EV_TTFT_ATTRIBUTION,
+    NULL_TRACER,
+    TRACK_ENGINE,
+    TRACK_QUEUE,
+    TRACK_SWAPPER,
+    Tracer,
+    slot_track,
+    trace_env_enabled,
+)
 from ..kvcache import (
     KVPoolSpec,
     PagedKVPool,
@@ -136,6 +158,13 @@ class EngineConfig:
     # whether the resulting KV is cached once on the shared trunk (True) or
     # per adapter (False — the differential baseline).
     share_prefix_kv: bool = True
+    # ---- libra-trace observability (repro.obs; README.md §Observability).
+    # True arms the span/audit tracer for this engine; the default follows
+    # REPRO_TRACE=1 (same env-override pattern as REPRO_SCHEDULE_MODE).
+    # Disabled tracing uses the module no-op singleton: zero events, same
+    # compile counts and token streams (the CI overhead gate pins this).
+    trace: bool = dataclasses.field(default_factory=trace_env_enabled)
+    trace_capacity: int = 200_000  # ring-buffer size before oldest-drop
 
 
 class ServingEngine:
@@ -191,6 +220,9 @@ class ServingEngine:
                 dtype=jnp.float32,  # engine cache dtype (widest leaf)
             )
             state_bytes = self.state_spec.snapshot_bytes
+        self.tracer = (
+            Tracer(capacity=config.trace_capacity) if config.trace else NULL_TRACER
+        )
         self.manager, self.swapper = make_fastlibra(
             config.hbm_bytes,
             config.host_bytes,
@@ -199,6 +231,7 @@ class ServingEngine:
             variant=config.variant,
             state_bytes=state_bytes,
             share_prefix_kv=config.share_prefix_kv,
+            tracer=self.tracer,
         )
         pool_blocks = self.manager.kv_pool.num_hbm_blocks
         host_blocks = self.manager.kv_pool.num_host_blocks
@@ -325,6 +358,14 @@ class ServingEngine:
         admission order all measure against this value."""
         if request.submit_time is None:
             request.submit_time = self._now()
+        if request.attrib_cursor is None:
+            # TTFT attribution window opens at arrival (request.py)
+            request.attrib_cursor = request.submit_time
+        if self.tracer.enabled:
+            self.tracer.instant(
+                TRACK_QUEUE, EV_SUBMIT, request.submit_time,
+                rid=request.request_id, adapter=request.adapter_id,
+                prompt_tokens=len(request.prompt), priority=request.priority)
         self.waiting.append(request)
 
     def abort(self, request: Request) -> None:
@@ -336,6 +377,10 @@ class ServingEngine:
         path when its step budget runs out."""
         if request.phase in (Phase.FINISHED, Phase.ABORTED):
             return
+        if self.tracer.enabled:
+            self.tracer.instant(
+                TRACK_QUEUE, EV_ABORT, self._now(),
+                rid=request.request_id, phase=request.phase.value)
         if request.phase is Phase.WAITING:
             try:
                 self.waiting.remove(request)
@@ -359,6 +404,11 @@ class ServingEngine:
         """Current engine-clock reading — the time base for ``submit_time``
         backdating and absolute ``deadline`` values."""
         return self._now()
+
+    def export_trace(self, path: str) -> None:
+        """Dump the tracer's buffer as Chrome trace-event JSON (loads in
+        Perfetto; see repro.obs). A disabled tracer dumps an empty trace."""
+        self.tracer.dump(path)
 
     def _now(self) -> float:
         if self._start_time is None:
@@ -430,7 +480,17 @@ class ServingEngine:
             # catch-up decode tokens ride outside the plan
             self._budget_used += planned
             self._budget_avail += budget
-        self._batch_tokens.append((self._now(), tokens))
+        t_end = self._now()
+        if self.tracer.enabled:
+            self.tracer.span(
+                TRACK_ENGINE, EV_STEP, now, t_end,
+                tokens=tokens, planned=planned, budget=budget,
+                step_ms=step_ms)
+            self.tracer.counter("queue_depth", t_end,
+                                waiting=float(len(self.waiting)))
+            self.tracer.counter("hbm_usage", t_end,
+                                frac=float(self.manager.hbm_usage()))
+        self._batch_tokens.append((t_end, tokens))
 
     def _mixed_step(self) -> tuple[int, int, int]:
         """One Sarathi-style step: decode slots + budgeted prefill chunks in
@@ -525,6 +585,7 @@ class ServingEngine:
         request state. Shared by the alternate and mixed schedulers so the
         transition bookkeeping cannot diverge between the two modes.
         Returns the rows that completed prefill and entered DECODE."""
+        t_dispatch = self._now()
         bucket = self.prefill.bucket_for(max(chunks.values()))
         tokens, true_lens, row_mask = assemble_batch(
             self.cfg.max_batch_slots, bucket,
@@ -551,12 +612,28 @@ class ServingEngine:
         # bookkeeping: ONE batched transfer per step is the right shape
         # libra: ignore[host-sync]
         toks = np.asarray(jnp.argmax(last_logits, axis=-1))
+        t_done = self._now()  # post-transfer: the dispatch actually finished
         for r in decode_rows:
+            if self.tracer.enabled:
+                self.tracer.span(slot_track(r.slot), EV_DECODE_STEP,
+                                 t_dispatch, t_done, rid=r.request_id)
             r.generated.append(int(toks[r.slot]))
             self._maybe_finish(r)
         transitioned = []
         for s, c in chunks.items():
             r = by_slot[s]
+            # TTFT attribution: [cursor, dispatch) was scheduler wait, the
+            # dispatch itself splits recompute/compute by this chunk's share
+            # of previously-computed history (preemption/eviction rebuild)
+            r.charge("stall", t_dispatch)
+            r.charge_prefill(
+                t_done, c,
+                max(0, min(r.prefill_pos + c, r.recompute_boundary)
+                    - r.prefill_pos))
+            if self.tracer.enabled:
+                self.tracer.span(slot_track(s), EV_PREFILL_CHUNK,
+                                 t_dispatch, t_done, rid=r.request_id,
+                                 pos=r.prefill_pos, tokens=c)
             r.prefill_pos += c
             r.prefill_chunks += 1
             if (self._state_reusable and r.staged_state is None
@@ -572,7 +649,9 @@ class ServingEngine:
                 if r.first_token_time is None:
                     # a resumed preemption victim keeps its TRUE first-token
                     # time from before the preemption
-                    r.first_token_time = self._now()
+                    t_ft = self._now()
+                    r.charge("compute", t_ft)  # closes the TTFT partition
+                    r.first_token_time = t_ft
                 self._maybe_finish(r)
                 if r.phase is Phase.DECODE:
                     transitioned.append(r)
@@ -625,6 +704,13 @@ class ServingEngine:
         # layouts match state-snapshot boundaries instead of per-token KV
         # — the resumable prefix is the deepest payload snapshot.
         history = req.prompt[:-1]
+        if self.tracer.enabled and req.ttft_predicted is None:
+            # calibration series: sample the admission cost model's TTFT
+            # estimate ONCE (first admission, pre-lookup so the probe sees
+            # the same tree state the ranking did) for predicted-vs-actual
+            req.ttft_predicted = self.manager.estimate_ttft(
+                req.adapter_id, history,
+                shared_prefix_len=req.shared_prefix_len)
         if self._state_reusable:
             lk = self.manager.lookup_state(req.adapter_id, history, now)
             matched = lk.state_tokens
@@ -652,6 +738,8 @@ class ServingEngine:
             self._execute_swaps(self.manager.drain_ops())
             return False
         t0 = self._now()
+        qstart = req.attrib_cursor  # queue-wait start (arrival or requeue)
+        req.charge("queue", t0)
         # drained ops include demand evictions that freed this query's
         # blocks — execute them before touching the pool physically
         self._execute_swaps(self.manager.drain_ops(), req=req)
@@ -663,6 +751,15 @@ class ServingEngine:
         req.admit_time = t0
         req.slot = self._free_slots.popleft()
         self._slot_req[req.slot] = req
+        if self.tracer.enabled:
+            if qstart is not None:
+                self.tracer.span(TRACK_QUEUE, EV_QUEUE, qstart, t0,
+                                 rid=req.request_id)
+            self.tracer.instant(
+                slot_track(req.slot),
+                EV_RESUME if req.preempt_count else EV_ADMIT, t0,
+                rid=req.request_id, adapter=req.adapter_id,
+                matched=matched, hbm_hit=lk.hbm_hit_tokens)
         self._begin_prefill(req)
         return True
 
@@ -706,6 +803,18 @@ class ServingEngine:
         """
         slot = victim.slot
         folded = len(victim.generated)
+        # attribution: time since the last charge was spent running/waiting
+        # in the slot; the preemption work itself lands in "other" below.
+        # Also remember how far this request had computed — the resume
+        # prefill below that boundary is "recompute", not fresh compute.
+        victim.charge("stall", now)
+        computed_upto = (len(victim.prompt) + folded - 1
+                         if victim.phase is Phase.DECODE
+                         else victim.prefill_pos)
+        if self.tracer.enabled:
+            self.tracer.instant(slot_track(slot), EV_PREEMPT, now,
+                                rid=victim.request_id,
+                                phase=victim.phase.value, folded=folded)
         if self._state_reusable:
             # the resumable boundary is wherever the recurrence actually
             # sits: full_tokens[:-1] for a decode row (capture it NOW — the
@@ -769,6 +878,9 @@ class ServingEngine:
         victim.state_capture_at = -1
         victim.phase = Phase.WAITING
         victim.preempt_count += 1
+        victim.recompute_boundary = max(victim.recompute_boundary,
+                                        computed_upto)
+        victim.charge("other", self._now())  # swap-out/fold bookkeeping
         self._slot_req[slot] = None
         self._free_slots.append(slot)
         victim.slot = -1
@@ -797,9 +909,12 @@ class ServingEngine:
         if prefix_len >= self._shared_bound(req):
             aid = self.adapters.slot_of(req.adapter_id)
             if aid is None:
+                req.charge("other", self._now())
                 aid = self.adapters.load(req.adapter_id)
+                req.charge("lora_load", self._now())
         self._set_len(slot, prefix_len)
         req.prefill_pos = prefix_len
+        req.charge("other", self._now())  # prefix gather/seed bookkeeping
         if self.cfg.prefill_mode == "eager":
             self._prefill_eager(req)
         else:
@@ -840,6 +955,8 @@ class ServingEngine:
         the boundary, capturing the state in between (the recurrence is
         destructive — there is no recovering an interior state afterwards)."""
         slot = req.slot
+        pos0 = req.prefill_pos
+        t_entry = self._now()
         # span cut points: the snapshot boundary (recurrent layouts) and the
         # shared-prefix boundary (base-model rows cannot share a dispatch
         # with adapter rows — the SGMV id is per row per call)
@@ -875,8 +992,18 @@ class ServingEngine:
         # libra: ignore[host-sync]
         tok = int(jnp.argmax(logits[slot, -1]))
         req.generated.append(tok)
+        t_done = self._now()
         if req.first_token_time is None:
-            req.first_token_time = self._now()
+            # attribution: the whole eager suffix dispatched in one go —
+            # split by its previously-computed share, then close the window
+            req.charge_prefill(
+                t_done, len(req.prompt) - pos0,
+                max(0, min(len(req.prompt), req.recompute_boundary) - pos0))
+            req.first_token_time = t_done
+        if self.tracer.enabled:
+            self.tracer.span(slot_track(slot), EV_PREFILL_CHUNK,
+                             t_entry, t_done, rid=req.request_id, pos=pos0,
+                             tokens=len(req.prompt) - pos0, eager=True)
         self._maybe_finish(req)
 
     def _prefill_once(self) -> int:
@@ -915,6 +1042,7 @@ class ServingEngine:
                    if r is not None and r.phase is Phase.DECODE])
         if not active:
             return 0
+        t0 = self._now()
         B = self.cfg.max_batch_slots
         tokens = np.zeros((B, 1), np.int32)
         for r in active:
@@ -929,6 +1057,11 @@ class ServingEngine:
         # bookkeeping: ONE batched transfer per step is the right shape
         # libra: ignore[host-sync]
         toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        if self.tracer.enabled:
+            t1 = self._now()
+            for r in active:
+                self.tracer.span(slot_track(r.slot), EV_DECODE_STEP,
+                                 t0, t1, rid=r.request_id)
         for r in active:
             r.generated.append(int(toks[r.slot]))
             self._maybe_finish(r)
@@ -947,6 +1080,20 @@ class ServingEngine:
         self._slot_req[req.slot] = None
         self._free_slots.append(req.slot)
         self.finished.append(req)
+        if self.tracer.enabled:
+            self.tracer.instant(slot_track(req.slot), EV_FINISH, now,
+                                rid=req.request_id,
+                                tokens=len(req.output_tokens))
+            att = req.ttft_attribution()
+            if att is not None:
+                self.tracer.instant(
+                    TRACK_QUEUE, EV_TTFT_ATTRIBUTION, now,
+                    rid=req.request_id, ttft=req.ttft,
+                    **{c: att.get(c, 0.0) for c in ATTRIB_CATEGORIES})
+            if req.ttft_predicted is not None and req.ttft is not None:
+                self.tracer.instant(
+                    TRACK_QUEUE, EV_CALIBRATION, now, rid=req.request_id,
+                    predicted=req.ttft_predicted, actual=req.ttft)
 
     def _commit(self, req: Request, now: float) -> None:
         """Scatter the request's new KV into its running blocks and fold them
@@ -990,26 +1137,38 @@ class ServingEngine:
                     self.adapters.load(op.lora_id)
                 elif op.kind in (SwapKind.SWAP_OUT, SwapKind.DROP):
                     self.adapters.unload(op.lora_id)
-                if req is not None and op.kind is SwapKind.SWAP_IN:
-                    req.lora_coldstart += self._now() - t0
             elif op.node_kind is NodeKind.STATE:
-                # whole-snapshot moves through the two-tier StateCache;
-                # cold-start accounting mirrors the KV layouts
+                # whole-snapshot moves through the two-tier StateCache
                 if op.kind is SwapKind.SWAP_IN:
                     self.state_cache.swap_in(op.src_blocks, op.dst_blocks)
-                    if req is not None:
-                        req.kv_coldstart += self._now() - t0
                 elif op.kind is SwapKind.SWAP_OUT:
                     self.state_cache.swap_out(op.src_blocks, op.dst_blocks)
                 # DROP: nothing physical to do
             else:
                 if op.kind is SwapKind.SWAP_IN:
                     self.kv_pool.swap_in(op.src_blocks, op.dst_blocks)
-                    if req is not None:
-                        req.kv_coldstart += self._now() - t0
                 elif op.kind is SwapKind.SWAP_OUT:
                     self.kv_pool.swap_out(op.src_blocks, op.dst_blocks)
                 # DROP: nothing physical to do
+            t1 = self._now()
+            if req is not None:
+                # cold-start accounting (paper Fig. 12): swap-ins only
+                if op.kind is SwapKind.SWAP_IN:
+                    if op.node_kind is NodeKind.LORA:
+                        req.lora_coldstart += t1 - t0
+                    else:
+                        req.kv_coldstart += t1 - t0
+                # TTFT attribution: every op on an admission's critical
+                # path is charged — demand evictions that freed this
+                # request's blocks ride the swap_in bucket
+                lora_in = (op.node_kind is NodeKind.LORA
+                           and op.kind is SwapKind.SWAP_IN)
+                req.charge("lora_load" if lora_in else "swap_in", t1)
+            if self.tracer.enabled:
+                self.tracer.span(
+                    TRACK_SWAPPER, "swap." + op.kind.value, t0, t1,
+                    kind=op.node_kind.name, lora=op.lora_id,
+                    bytes=op.nbytes, node=op.node_id)
 
     # ------------------------------------------------------------- helpers
     def _adapter_ids(self, base_rows: tuple[int, ...] = ()) -> jax.Array:
@@ -1055,6 +1214,7 @@ class ServingEngine:
             self.adapters.unload(victim)
             s = self.adapters.load(req.adapter_id)
         req.lora_coldstart += self._now() - t0
+        req.charge("lora_load", self._now())
         return s
 
     def _set_len(self, slot: int, value: int) -> None:

@@ -41,6 +41,16 @@ class ServingReport:
     n_aborted: int = 0  # aborted (drained or explicit abort()) requests
     n_unfinished: int = 0  # still WAITING/in-flight when the report was cut
     n_preempted: int = 0  # preemption events (a victim can count twice)
+    # libra-trace TTFT attribution (repro.obs): mean per-request seconds the
+    # first token spent recomputing evicted/preempted prefix work, and mean
+    # dispatch stall — both additive slices of TTFT (always measured; the
+    # tracer only gates event emission)
+    avg_recompute: float = 0.0
+    avg_stall: float = 0.0
+    # estimate_ttft calibration over requests that had a prediction sampled
+    # at admission (tracing armed): mean |predicted − actual| and signed bias
+    ttft_pred_mae: float = 0.0
+    ttft_pred_bias: float = 0.0
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -76,6 +86,11 @@ def summarize(
     ttfts = [r.ttft for r in reqs]
     tpots = [r.tpot for r in reqs if r.tpot is not None]
     queues = [r.queue_time for r in reqs if r.queue_time is not None]
+    pred_errs = [
+        r.ttft_predicted - r.ttft
+        for r in reqs
+        if getattr(r, "ttft_predicted", None) is not None
+    ]
     return ServingReport(
         n_finished=len(reqs),
         avg_ttft=statistics.fmean(ttfts) if ttfts else 0.0,
@@ -100,4 +115,13 @@ def summarize(
         n_aborted=n_aborted,
         n_unfinished=n_unfinished,
         n_preempted=n_preempted,
+        avg_recompute=statistics.fmean(
+            [getattr(r, "attribution", {}).get("recompute", 0.0)
+             for r in reqs]) if reqs else 0.0,
+        avg_stall=statistics.fmean(
+            [getattr(r, "attribution", {}).get("stall", 0.0)
+             for r in reqs]) if reqs else 0.0,
+        ttft_pred_mae=statistics.fmean(
+            [abs(e) for e in pred_errs]) if pred_errs else 0.0,
+        ttft_pred_bias=statistics.fmean(pred_errs) if pred_errs else 0.0,
     )

@@ -97,6 +97,57 @@ class Request:
     # continues token-identically from where preemption cut it off
     carried: list[int] = dataclasses.field(default_factory=list)
     preempt_count: int = 0
+    # highest absolute prompt position this request had already computed
+    # before a preemption folded it back to WAITING: prefill work below
+    # this boundary is classified as ``recompute`` in the TTFT attribution
+    # (0 for a never-preempted request — all prefill is fresh compute)
+    recompute_boundary: int = 0
+    # TTFT attribution (repro.obs): an EXACT additive partition of
+    # [submit_time, first_token_time] into the categories of
+    # ``obs.ATTRIB_CATEGORIES``. The engine advances ``attrib_cursor`` at
+    # every charge point (queue end, per swap op, per prefill dispatch, ...)
+    # so sum(attribution.values()) == ttft by construction. Accounting is
+    # host-float cheap and always on (like lora/kv_coldstart); span/event
+    # emission is what the tracer gates.
+    attribution: dict[str, float] = dataclasses.field(default_factory=dict)
+    attrib_cursor: Optional[float] = None
+    # estimate_ttft sampled at first admission when tracing is armed, for
+    # the predicted-vs-actual calibration series
+    ttft_predicted: Optional[float] = None
+
+    # -- TTFT attribution charging (called by the engine) -------------------
+
+    def charge(self, category: str, t: float) -> None:
+        """Attribute [attrib_cursor, t) to ``category`` and advance the
+        cursor. No-op before submit or after the first token closed the
+        window (a resumed decode-phase victim charges nothing)."""
+        if self.attrib_cursor is None or self.first_token_time is not None:
+            return
+        dt = t - self.attrib_cursor
+        if dt > 0:
+            self.attribution[category] = self.attribution.get(category, 0.0) + dt
+            self.attrib_cursor = t
+
+    def charge_prefill(self, t: float, tokens: int, hist_tokens: int) -> None:
+        """Split [attrib_cursor, t) between ``recompute`` (the share of this
+        dispatch's tokens that rebuild already-seen history, i.e. positions
+        below len(prompt)-1 lost to eviction/preemption) and ``compute``."""
+        if self.attrib_cursor is None or self.first_token_time is not None:
+            return
+        dt = t - self.attrib_cursor
+        if dt > 0:
+            frac = min(max(hist_tokens, 0), tokens) / tokens if tokens > 0 else 0.0
+            rec = dt * frac
+            if rec > 0:
+                self.attribution["recompute"] = self.attribution.get("recompute", 0.0) + rec
+            self.attribution["compute"] = self.attribution.get("compute", 0.0) + (dt - rec)
+            self.attrib_cursor = t
+
+    def ttft_attribution(self) -> Optional[dict[str, float]]:
+        """The additive breakdown, or None before the first token."""
+        if self.ttft is None:
+            return None
+        return dict(self.attribution)
 
     @property
     def ttft(self) -> Optional[float]:

@@ -30,6 +30,25 @@ from typing import Optional
 from ..core import CacheManager, CacheSwapper, NodeKind, SwapKind, make_fastlibra
 from ..core.cost_model import HardwareModel
 from ..data.traces import SimQuery
+from ..obs import (
+    ATTRIB_CATEGORIES,
+    EV_ADMIT,
+    EV_CALIBRATION,
+    EV_DECODE_STEP,
+    EV_FINISH,
+    EV_PREEMPT,
+    EV_PREFILL_CHUNK,
+    EV_QUEUE,
+    EV_RESUME,
+    EV_STEP,
+    EV_SUBMIT,
+    EV_TTFT_ATTRIBUTION,
+    NULL_TRACER,
+    TRACK_ENGINE,
+    TRACK_QUEUE,
+    Tracer,
+    trace_env_enabled,
+)
 from .hardware import DeployedModel
 
 
@@ -55,6 +74,10 @@ class SimConfig:
     # cross-adapter prefix sharing: cache declared adapter-independent spans
     # once on the shared trunk (False = per-adapter baseline)
     share_prefix_kv: bool = True
+    # libra-trace parity: arm the same Tracer/event vocabulary the engine
+    # uses (also armed by REPRO_TRACE=1, like EngineConfig.trace)
+    trace: bool = dataclasses.field(default_factory=trace_env_enabled)
+    trace_capacity: int = 200_000
 
 
 @dataclasses.dataclass
@@ -81,6 +104,21 @@ class SimRequest:
     # decode continues from token carried+1 — never recomputed divergently
     carried: int = 0
     preempt_count: int = 0
+    # libra-trace TTFT attribution (mirrors serving.Request): an exact
+    # additive partition of [arrival, first_token_time] on the VIRTUAL clock
+    attribution: dict = dataclasses.field(default_factory=dict)
+    attrib_cursor: Optional[float] = None
+    ttft_predicted: Optional[float] = None
+
+    def charge(self, category: str, t: float) -> None:
+        """Attribute [attrib_cursor, t) to ``category`` and advance the
+        cursor; closed once the first token lands (see Request.charge)."""
+        if self.attrib_cursor is None or self.first_token_time is not None:
+            return
+        dt = t - self.attrib_cursor
+        if dt > 0:
+            self.attribution[category] = self.attribution.get(category, 0.0) + dt
+            self.attrib_cursor = t
 
     @property
     def eff_prompt(self) -> tuple[int, ...]:
@@ -185,6 +223,10 @@ class ServingSimulator:
         # recurrent archs: the prefix layer is state snapshots, and TTFT is
         # snapshot-aware — a matched boundary shrinks the prefill suffix
         self._state_mode = deployed.is_recurrent
+        self.tracer = (
+            Tracer(capacity=self.cfg.trace_capacity)
+            if self.cfg.trace else NULL_TRACER
+        )
         self.manager, self.swapper = make_fastlibra(
             pool_bytes,
             deployed.npu.host_bytes,
@@ -194,6 +236,7 @@ class ServingSimulator:
             variant=self.cfg.variant,
             state_bytes=deployed.state_snapshot_bytes,
             share_prefix_kv=self.cfg.share_prefix_kv,
+            tracer=self.tracer,
         )
         # register every LoRA in the trace (host-resident at t=0)
         for lid in sorted({q.lora_id for q in trace}):
@@ -274,6 +317,14 @@ class ServingSimulator:
         victim.hbm_hit_tokens = 0
         victim.prefill_done = 0
         victim.preempt_count += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                TRACK_ENGINE, EV_PREEMPT, now,
+                rid=victim.rid, folded=victim.tokens_done)
+
+    def export_trace(self, path: str) -> None:
+        """Dump the collected trace as Chrome trace-event JSON."""
+        self.tracer.dump(path)
 
     # ------------------------------------------------------------ main loop
     def run(self) -> SimResult:
@@ -317,7 +368,13 @@ class ServingSimulator:
             while arrivals and arrivals[0][0] <= now:
                 _, _, q = heapq.heappop(arrivals)
                 rid += 1
-                waiting.append(SimRequest(query=q, rid=f"q{rid}"))
+                r = SimRequest(query=q, rid=f"q{rid}")
+                r.attrib_cursor = q.arrival
+                waiting.append(r)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        TRACK_QUEUE, EV_SUBMIT, q.arrival, rid=r.rid,
+                        adapter=q.lora_id, prompt_tokens=len(q.prompt))
             # periodic swapper (proactive: transfers happen in the background,
             # off every query's critical path — FASTLIBRA's key advantage)
             if self.swapper.due(now):
@@ -341,6 +398,12 @@ class ServingSimulator:
                 blocked = len(running) + len(pending) >= cfg.max_batch
                 if not blocked:
                     prompt = r.eff_prompt
+                    if self.tracer.enabled and r.ttft_predicted is None:
+                        # pre-lookup, so the estimate prices the cold start
+                        # this admission is about to pay (calibration series)
+                        r.ttft_predicted = self.manager.estimate_ttft(
+                            q.lora_id, prompt[:-1],
+                            shared_prefix_len=q.shared_prefix_len)
                     if self._state_mode:
                         lk = self.manager.lookup_state(
                             q.lora_id, prompt[:-1], now)
@@ -392,9 +455,21 @@ class ServingSimulator:
                 r.hbm_hit_tokens = lk.hbm_hit_tokens
                 r.admit_time = now
                 r.queue_time = now - q.arrival
+                qstart = r.attrib_cursor
+                r.charge("queue", now)
+                if self.tracer.enabled:
+                    if qstart is not None and now > qstart:
+                        self.tracer.span(
+                            TRACK_QUEUE, EV_QUEUE, qstart, now, rid=r.rid)
+                    self.tracer.instant(
+                        TRACK_QUEUE,
+                        EV_RESUME if r.preempt_count else EV_ADMIT, now,
+                        rid=r.rid, adapter=q.lora_id, matched=matched,
+                        hbm_hit=r.hbm_hit_tokens)
                 # everything this admission moved — swap-ins of the needed
                 # nodes AND demand-eviction swap-outs that freed its blocks —
                 # is on this query's critical path (synchronous cold start)
+                lora0, kv0 = r.lora_coldstart, r.kv_coldstart
                 ops = self.manager.drain_ops()
                 self._execute_ops(ops, now)
                 ready = now
@@ -423,6 +498,16 @@ class ServingSimulator:
                     r.matched_tokens = 0
                     r.hbm_hit_tokens = 0
                     ready = now
+                if ready > now:
+                    # the synchronous cold-start wait: split the wall time
+                    # between lora_load and swap_in in proportion to the
+                    # per-channel cold-start this admission accrued
+                    dl = r.lora_coldstart - lora0
+                    dk = r.kv_coldstart - kv0
+                    if dl > 0:
+                        frac = dl / (dl + dk) if (dl + dk) > 0 else 1.0
+                        r.charge("lora_load", now + (ready - now) * frac)
+                    r.charge("swap_in", ready)
                 r.ready_time = ready
                 r.prefill_done = 0
                 pending.append(r)
@@ -430,7 +515,9 @@ class ServingSimulator:
             ready_prefills = [r for r in pending if r.ready_time <= now]
             if ready_prefills or running:
                 t_iter = 0.0
+                t_start = now
                 entered: list[SimRequest] = []  # prefills completing now
+                chunks: list[tuple[SimRequest, int]] = []  # (req, tokens)
                 prefill_tokens = 0
                 if cfg.schedule_mode == "mixed":
                     # Sarathi-style: decode tokens (1 per running request)
@@ -453,6 +540,7 @@ class ServingSimulator:
                         r.prefill_done += take
                         budget -= take
                         prefill_tokens += take
+                        chunks.append((r, take))
                         if (r.prefill_done
                                 >= len(r.eff_prompt) - r.matched_tokens):
                             entered.append(r)
@@ -463,6 +551,7 @@ class ServingSimulator:
                         new = len(r.eff_prompt) - r.matched_tokens
                         t_iter += self.hw.prefill_time(new, r.matched_tokens)
                         prefill_tokens += new
+                        chunks.append((r, new))
                         entered.append(r)
                 ctx = sum(
                     len(r.query.prompt) + r.tokens_done for r in running
@@ -470,6 +559,29 @@ class ServingSimulator:
                 t_iter += self.hw.decode_time(len(running), ctx)
                 last_iter_tokens = len(running) + prefill_tokens
                 now += max(t_iter, 1e-6)
+                # attribution: time a ready prefill sat past its ready_time
+                # is "stall", its share of this iteration is "compute" —
+                # charged before first_token_time closes the window below
+                for r, take in chunks:
+                    r.charge("stall", t_start)
+                    r.charge("compute", now)
+                if self.tracer.enabled:
+                    for r, take in chunks:
+                        self.tracer.span(
+                            TRACK_ENGINE, EV_PREFILL_CHUNK, t_start, now,
+                            rid=r.rid, tokens=take)
+                    if running:
+                        self.tracer.span(
+                            TRACK_ENGINE, EV_DECODE_STEP, t_start, now,
+                            rows=len(running))
+                    self.tracer.span(
+                        TRACK_ENGINE, EV_STEP, t_start, now,
+                        tokens=last_iter_tokens)
+                    self.tracer.counter(
+                        "queue_depth", now,
+                        waiting=float(len(waiting) + len(pending)))
+                    self.tracer.counter(
+                        "hbm_usage", now, frac=float(self.manager.hbm_usage()))
                 for r in entered:
                     if r.first_token_time is None:
                         # a resumed preemption victim keeps its TRUE first-
@@ -510,6 +622,23 @@ class ServingSimulator:
                             self.manager.commit(r.rid, r.lookup, r.query.full, now)
                         self.manager.unpin(r.pinned)
                         finished.append(r)
+                        if self.tracer.enabled:
+                            self.tracer.instant(
+                                TRACK_ENGINE, EV_FINISH, now,
+                                rid=r.rid, tokens=r.tokens_done)
+                            if r.ttft is not None:
+                                att = r.attribution
+                                self.tracer.instant(
+                                    TRACK_QUEUE, EV_TTFT_ATTRIBUTION, now,
+                                    rid=r.rid, ttft=r.ttft,
+                                    **{c: att.get(c, 0.0)
+                                       for c in ATTRIB_CATEGORIES})
+                            if (r.ttft_predicted is not None
+                                    and r.ttft is not None):
+                                self.tracer.instant(
+                                    TRACK_QUEUE, EV_CALIBRATION, now,
+                                    rid=r.rid, predicted=r.ttft_predicted,
+                                    actual=r.ttft)
                     else:
                         still.append(r)
                 # decode-growth evictions transfer in the background

@@ -140,6 +140,52 @@ def pick_stable(nodes):
     assert vs[0].line == 2
 
 
+def test_raw_clock_fires_in_hot_packages(tmp_path):
+    hot = tmp_path / "core"
+    hot.mkdir()
+    (hot / "mod.py").write_text("""\
+import time
+
+def step():
+    t = time.time()
+    print("step", t)
+    return t
+""")
+    vs = run_lint([str(hot / "mod.py")])
+    assert rule_ids(vs) == ["raw-clock", "raw-clock"]
+    assert [v.line for v in vs] == [4, 5]
+
+    (hot / "clean.py").write_text("""\
+import time
+
+def step():
+    return time.monotonic() + time.perf_counter()
+""")
+    assert run_lint([str(hot / "clean.py")]) == []
+
+
+def test_raw_clock_ignores_cold_packages_and_suppressions(tmp_path):
+    cold = tmp_path / "launch"
+    cold.mkdir()
+    (cold / "mod.py").write_text("""\
+import time
+
+def main():
+    print("report:", time.time())
+""")
+    assert run_lint([str(cold / "mod.py")]) == []
+
+    hot = tmp_path / "serving"
+    hot.mkdir()
+    (hot / "mod.py").write_text("""\
+import time
+
+def step():
+    return time.time()  # libra: ignore[raw-clock]
+""")
+    assert run_lint([str(hot / "mod.py")]) == []
+
+
 def test_syntax_error_is_reported_not_raised(tmp_path):
     vs = lint_src(tmp_path, "def broken(:\n")
     assert rule_ids(vs) == ["syntax-error"]
@@ -204,7 +250,7 @@ def test_list_rules_covers_registry(capsys):
     out = capsys.readouterr().out
     for rule in all_rules():
         assert rule.rule_id in out
-    assert len(all_rules()) >= 5
+    assert len(all_rules()) >= 6
 
 
 # ------------------------------------------------------------- real tree

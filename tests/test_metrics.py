@@ -1,0 +1,115 @@
+"""Unit tests for serving metrics aggregation (serving/metrics.py).
+
+Percentile edge cases, ``ServingReport.row()`` round-tripping (the contract
+the unified benchmark emitter in benchmarks/common.py builds on), and
+``summarize()`` over partially-populated requests — finished requests that
+never recorded a TPOT (single-token decodes) or a queue time must not crash
+or skew the aggregates.
+"""
+
+from repro.serving.metrics import ServingReport, _p, summarize
+from repro.serving.request import Request
+
+
+def _req(rid, submit=0.0, admit=None, first=None, finish=None, tokens=()):
+    r = Request(rid, "lora-0", (1, 2, 3), max_new_tokens=4)
+    r.submit_time = submit
+    r.admit_time = admit
+    r.first_token_time = first
+    r.finish_time = finish
+    r.generated = list(tokens)
+    return r
+
+
+# ------------------------------------------------------------------ _p
+def test_percentile_empty_is_zero():
+    assert _p([], 0.5) == 0.0
+    assert _p([], 0.99) == 0.0
+
+
+def test_percentile_single_element():
+    assert _p([3.25], 0.0) == 3.25
+    assert _p([3.25], 0.5) == 3.25
+    assert _p([3.25], 0.99) == 3.25
+    assert _p([3.25], 1.0) == 3.25
+
+
+def test_percentile_bounds_and_order_independence():
+    vals = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert _p(vals, 0.0) == 1.0  # q=0 -> minimum
+    assert _p(vals, 1.0) == 5.0  # q=1 clamps to the maximum
+    assert _p(vals, 0.5) == _p(sorted(vals), 0.5)
+    assert min(vals) <= _p(vals, 0.99) <= max(vals)
+
+
+# ------------------------------------------------------- row round-trip
+def test_report_row_round_trip():
+    rep = ServingReport(
+        n_finished=3, avg_ttft=0.5, p99_ttft=0.9, avg_tpot=0.01,
+        avg_queue=0.1, avg_lora_coldstart=0.02, avg_kv_coldstart=0.03,
+        throughput_qps=2.0, kv_hit_rate=0.4, lora_hit_rate=0.6,
+        invalid_kv_fraction=0.0, hbm_utilization=0.7,
+        ttft_pred_mae=0.005, ttft_pred_bias=-0.001,
+    )
+    row = rep.row()
+    assert isinstance(row, dict)
+    assert ServingReport(**row) == rep
+    # every dataclass field is present in the row (the benchmark emitter's
+    # field-selection contract)
+    assert set(row) == set(ServingReport.__dataclass_fields__)
+
+
+# ------------------------------------------------------------ summarize
+def test_summarize_skips_requests_without_first_token():
+    done = _req("a", submit=0.0, admit=0.5, first=1.0, finish=2.0,
+                tokens=(7, 8, 9))
+    never_started = _req("b")  # no first token: excluded everywhere
+    rep = summarize([done, never_started], wall_time=2.0)
+    assert rep.n_finished == 1
+    assert rep.avg_ttft == 1.0
+    assert rep.throughput_qps == 0.5
+
+
+def test_summarize_handles_missing_tpot_and_queue():
+    # single-token decode: finish == first token, tpot defined but zero;
+    # no admit_time recorded: queue_time is None and must be skipped
+    one_tok = _req("a", submit=0.0, admit=None, first=1.0, finish=1.0,
+                   tokens=(7,))
+    assert one_tok.queue_time is None
+    full = _req("b", submit=0.0, admit=0.25, first=0.5, finish=1.5,
+                tokens=(1, 2, 3, 4))
+    rep = summarize([one_tok, full], wall_time=2.0)
+    assert rep.n_finished == 2
+    assert rep.avg_queue == 0.25  # only b contributes
+    assert rep.p99_queue == 0.25
+    assert rep.avg_tpot > 0.0
+
+
+def test_summarize_empty_iterable():
+    rep = summarize([], wall_time=1.0)
+    assert rep.n_finished == 0
+    assert rep.avg_ttft == 0.0
+    assert rep.p99_ttft == 0.0
+    assert rep.throughput_qps == 0.0
+    assert rep.ttft_pred_mae == 0.0
+
+
+def test_summarize_calibration_fields():
+    a = _req("a", submit=0.0, admit=0.1, first=1.0, finish=2.0, tokens=(1, 2))
+    a.ttft_predicted = 1.2  # over-estimate by 0.2
+    b = _req("b", submit=0.0, admit=0.1, first=1.0, finish=2.0, tokens=(1, 2))
+    b.ttft_predicted = 0.9  # under-estimate by 0.1
+    c = _req("c", submit=0.0, admit=0.1, first=1.0, finish=2.0, tokens=(1, 2))
+    # c: no prediction sampled (tracing disabled) — excluded from calibration
+    rep = summarize([a, b, c], wall_time=2.0)
+    assert abs(rep.ttft_pred_mae - 0.15) < 1e-12
+    assert abs(rep.ttft_pred_bias - 0.05) < 1e-12
+
+
+def test_summarize_attribution_means():
+    a = _req("a", submit=0.0, admit=0.1, first=1.0, finish=2.0, tokens=(1, 2))
+    a.attribution = {"recompute": 0.2, "stall": 0.1, "compute": 0.7}
+    b = _req("b", submit=0.0, admit=0.1, first=1.0, finish=2.0, tokens=(1, 2))
+    rep = summarize([a, b], wall_time=2.0)
+    assert abs(rep.avg_recompute - 0.1) < 1e-12
+    assert abs(rep.avg_stall - 0.05) < 1e-12
